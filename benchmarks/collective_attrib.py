@@ -1,0 +1,93 @@
+"""Attribute collective link bytes to model operations via HLO metadata.
+
+The hillclimb needs to know *which* op each all-gather/all-reduce serves.
+Every HLO collective carries ``metadata={op_name="jit(train_step)/..."}``;
+grouping link bytes by a normalized op_name prefix turns the flat
+"24 TB/device" number into a ranked table of offenders
+(e.g. 70% = FSDP weight gathers in the bwd remat, 20% = SP activation
+gathers, ...), which is what the hypothesis->change->measure loop in
+EXPERIMENTS.md §Perf iterates on.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+from repro.launch.dryrun import (  # reuse the parsing tables
+    _COLL_RE,
+    _GROUPS_BRACE_RE,
+    _GROUPS_RE,
+    _shape_bytes,
+)
+
+_META_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def _normalize(op_name: str) -> str:
+    """Collapse an op_name path to a readable bucket."""
+    parts = op_name.split("/")
+    keep = []
+    for p in parts:
+        p = re.sub(r"\[.*\]", "", p)
+        if p.startswith(("jit(", "transpose(", "closed_call", "checkpoint",
+                          "rematted_computation", "while", "body", "cond")):
+            # keep structural markers that distinguish fwd from bwd
+            if p.startswith("transpose("):
+                keep.append("bwd")
+            continue
+        keep.append(p)
+    tail = "/".join(keep[-3:]) if keep else op_name[-60:]
+    return tail or "(top)"
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def attribute(hlo_text: str, n_devices: int) -> list[tuple[str, str, float, int]]:
+    """Returns [(bucket, op_kind, link_bytes_per_device, count)] sorted desc."""
+    acc: dict[tuple[str, str], list] = defaultdict(lambda: [0.0, 0])
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        type_str, op, _ = m.groups()
+        size = _shape_bytes(type_str)
+        n = _group_size(line, n_devices)
+        if op == "all-gather":
+            b = size * (n - 1) / max(n, 1)
+        elif op == "reduce-scatter":
+            b = size * (n - 1)
+        elif op == "all-reduce":
+            b = 2 * size * (n - 1) / max(n, 1)
+        elif op == "all-to-all":
+            b = size * (n - 1) / max(n, 1)
+        else:
+            b = size
+        meta = _META_RE.search(line)
+        bucket = _normalize(meta.group(1)) if meta else "(no-metadata)"
+        key = (bucket, op)
+        acc[key][0] += b
+        acc[key][1] += 1
+    rows = [(k[0], k[1], v[0], v[1]) for k, v in acc.items()]
+    rows.sort(key=lambda r: -r[2])
+    return rows
+
+
+def report(hlo_text: str, n_devices: int, top: int = 25) -> str:
+    rows = attribute(hlo_text, n_devices)
+    total = sum(r[2] for r in rows) or 1.0
+    lines = [f"{'bytes/dev':>12} {'share':>6} {'count':>6} kind                bucket"]
+    for bucket, op, b, c in rows[:top]:
+        lines.append(
+            f"{b/2**30:10.2f}G {b/total*100:5.1f}% {c:6d} {op:19s} {bucket}"
+        )
+    lines.append(f"{total/2**30:10.2f}G  total")
+    return "\n".join(lines)

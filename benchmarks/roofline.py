@@ -1,0 +1,143 @@
+"""Roofline analysis over the dry-run records (deliverable g).
+
+Reads the JSONL that ``repro.launch.dryrun`` writes and derives, per
+(arch × shape × mesh):
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = link_bytes_per_device / link_bw
+
+(The dry-run's cost analysis is per partitioned module = per device, so
+dividing per-device quantities by per-chip peaks is identical to the
+spec's global/(chips × peak) form.)
+
+Hardware constants: TPU v5e — 197 bf16 TFLOP/s, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+Output: a markdown table (stdout or --md file) with the dominant term,
+MODEL_FLOPS/HLO_FLOPs usefulness ratio, and a one-line lever per row —
+pasted into EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9       # bytes/s / chip
+LINK_BW = 50e9       # bytes/s / link
+
+
+LEVERS = {
+    "compute": "raise MXU utilization: bigger per-device microbatch, fused attention kernel, bf16 everywhere",
+    "memory": "cut HBM traffic: fuse norms/elementwise into matmuls, wider blocks, avoid fp32 round-trips",
+    "collective": "cut link bytes: drop sequence-parallel gathers where per-device batch is small, reduce-scatter grads, keep KV local (batch-shard instead of seq-shard)",
+}
+
+
+def analyze_record(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    cost = rec["cost"]
+    t_comp = cost["flops_per_device"] / PEAK_FLOPS
+    t_mem = cost["bytes_per_device"] / HBM_BW
+    t_coll = cost["collective_bytes_per_device"] / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    model_flops = rec.get("model_flops_per_device", 0.0)
+    useful = model_flops / cost["flops_per_device"] if cost["flops_per_device"] else 0.0
+    # roofline fraction: useful model FLOPs per second achievable at the
+    # bound, relative to peak
+    achievable = model_flops / bound / PEAK_FLOPS if bound > 0 else 0.0
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "mesh", "kind")},
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": achievable,
+        "hbm_total": rec["hbm_model"]["total"],
+        "hbm_fits": rec["hbm_model"]["fits_v5e_16gb"],
+        "xla_upper": rec["memory"]["peak_bytes"],
+        "lever": LEVERS[dominant],
+    }
+
+
+def load(path: str | Path) -> list[dict]:
+    out = []
+    for line in open(path):
+        rec = json.loads(line)
+        row = analyze_record(rec)
+        if row is not None:
+            out.append(row)
+        elif rec.get("status") == "skipped":
+            out.append(
+                {
+                    **{k: rec[k] for k in ("arch", "shape", "mesh")},
+                    "skipped": rec["reason"],
+                }
+            )
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def markdown(rows: list[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | compute | memory | collective | dominant | useful | roofline-frac | HBM/dev | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"skip | — | — | — | — |"
+            )
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{fmt_s(r['t_compute_s'])} | {fmt_s(r['t_memory_s'])} | "
+            f"{fmt_s(r['t_collective_s'])} | **{r['dominant']}** | "
+            f"{r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.3f} | "
+            f"{r['hbm_total']/2**30:.2f}G | {'yes' if r['hbm_fits'] else 'NO'} |"
+        )
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--records",
+        default="benchmarks/results/dryrun_baseline.jsonl",
+    )
+    ap.add_argument("--md", default=None, help="write markdown here")
+    ap.add_argument("--mesh", choices=["single", "multi"], default=None)
+    args = ap.parse_args(argv)
+    rows = load(args.records)
+    if args.mesh:
+        rows = [r for r in rows if r["mesh"] == args.mesh]
+    text = markdown(rows)
+    if args.md:
+        Path(args.md).write_text(text + "\n")
+    print(text)
+    # per-dominant-term summary
+    from collections import Counter
+
+    counts = Counter(r.get("dominant", "skip") for r in rows)
+    print(f"\ndominant-term counts: {dict(counts)}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,9 @@
+"""Repo-root conftest: makes ``benchmarks/`` importable from tests
+regardless of how pytest is invoked (``pytest tests/`` vs ``python -m
+pytest``).  Does NOT touch XLA flags — only the dry-run entry point may
+pin the device count (see repro/launch/dryrun.py)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

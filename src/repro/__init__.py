@@ -1,0 +1,30 @@
+"""repro — pPython (PGAS parallel Python) rebuilt as a JAX/TPU framework.
+
+Faithful layer: ``repro.core`` (Dmap/Dmat/PITFALLS), ``repro.comm``
+(PythonMPI), ``repro.launch.prun`` (SPMD launcher).  Scale layer:
+``repro.core.jax_bridge`` + ``repro.models``/``repro.train``/``repro.serve``
+(the 10 assigned LM architectures on the production TPU mesh).
+
+The paper's program-facing globals are module attributes::
+
+    import repro as pPython
+    me  = pPython.Pid   # rank of this SPMD instance
+    np_ = pPython.Np    # number of SPMD instances
+"""
+
+from . import comm, core
+from .core import *  # noqa: F401,F403 — the pPython user surface
+from .core import __all__ as _core_all
+
+__version__ = "1.0.0"
+
+__all__ = ["comm", "core", "Np", "Pid", *_core_all]
+
+
+def __getattr__(name: str):
+    # Paper §III.A: pPython.Np / pPython.Pid reflect the active SPMD context.
+    if name == "Np":
+        return comm.Np()
+    if name == "Pid":
+        return comm.Pid()
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

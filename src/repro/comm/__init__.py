@@ -1,0 +1,41 @@
+"""PythonMPI — pPython's messaging layer (paper §III.D).
+
+Three interchangeable transports behind one interface:
+
+* ``FileMPI``   — the paper's transport: pickle payloads through a shared
+                  filesystem, one-sided (a send never waits for its receive),
+                  messages inspectable on disk.
+* ``ThreadComm``— in-process queues; used by tests/benchmarks to run SPMD
+                  codes without process-launch overhead.
+* ``LocalComm`` — Np=1 degenerate context (every op is a no-op/self-copy).
+
+This package is intentionally NumPy-only (no JAX import): pRUN workers must
+start fast and run anywhere Python runs.
+"""
+
+from .context import (
+    CommContext,
+    LocalComm,
+    Np,
+    Pid,
+    StragglerTimeout,
+    get_context,
+    init,
+    set_context,
+)
+from .filempi import FileMPI
+from .threadcomm import ThreadComm, run_spmd
+
+__all__ = [
+    "CommContext",
+    "FileMPI",
+    "LocalComm",
+    "ThreadComm",
+    "StragglerTimeout",
+    "run_spmd",
+    "get_context",
+    "set_context",
+    "init",
+    "Np",
+    "Pid",
+]

@@ -1,0 +1,186 @@
+"""Communication context: the MPI subset pPython needs (paper §III.D).
+
+``MPI_Init / MPI_Comm_size / MPI_Comm_rank / MPI_Send / MPI_Recv /
+MPI_Bcast / MPI_Finalize`` map onto ``init / .np / .pid / .send / .recv /
+.bcast / .finalize``.  A module-level active context gives pPython programs
+the paper's ``pPython.Np`` / ``pPython.Pid`` view of the world.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Any
+
+__all__ = [
+    "CommContext",
+    "LocalComm",
+    "StragglerTimeout",
+    "get_context",
+    "set_context",
+    "init",
+    "Np",
+    "Pid",
+]
+
+BARRIER_TAG = "__pp_barrier"
+AGG_TAG = "__pp_agg"
+DEFAULT_RECV_TIMEOUT = float(os.environ.get("PPYTHON_RECV_TIMEOUT", "300"))
+
+
+class StragglerTimeout(RuntimeError):
+    """A receive exceeded its deadline — the peer is straggling or dead."""
+
+
+class CommContext:
+    """Abstract SPMD communication context."""
+
+    np_: int
+    pid: int
+
+    # -- required primitives -------------------------------------------------
+
+    def send(self, dest: int, tag: Any, obj: Any) -> None:
+        raise NotImplementedError
+
+    def recv(self, source: int, tag: Any, timeout: float | None = None) -> Any:
+        raise NotImplementedError
+
+    def probe(self, source: int, tag: Any) -> bool:
+        raise NotImplementedError
+
+    def finalize(self) -> None:  # MPI_Finalize
+        pass
+
+    # -- derived collectives --------------------------------------------------
+
+    def bcast(self, root: int, obj: Any = None, tag: Any = "__pp_bcast") -> Any:
+        if self.np_ == 1:
+            return obj
+        if self.pid == root:
+            for dst in range(self.np_):
+                if dst != root:
+                    self.send(dst, tag, obj)
+            return obj
+        return self.recv(root, tag)
+
+    def barrier(self, tag: Any = BARRIER_TAG) -> None:
+        """Dissemination-free central barrier (gather to 0, release)."""
+        if self.np_ == 1:
+            return
+        if self.pid == 0:
+            for src in range(1, self.np_):
+                self.recv(src, (tag, "in"))
+            for dst in range(1, self.np_):
+                self.send(dst, (tag, "out"), None)
+        else:
+            self.send(0, (tag, "in"), None)
+            self.recv(0, (tag, "out"))
+
+    def gather(self, root: int, obj: Any, tag: Any = AGG_TAG) -> list | None:
+        if self.np_ == 1:
+            return [obj]
+        if self.pid == root:
+            parts: list[Any] = [None] * self.np_
+            parts[root] = obj
+            for src in range(self.np_):
+                if src != root:
+                    parts[src] = self.recv(src, (tag, src))
+            return parts
+        self.send(root, (tag, self.pid), obj)
+        return None
+
+    def allgather(self, obj: Any, tag: Any = "__pp_allgather") -> list:
+        parts = self.gather(0, obj, tag=(tag, "g"))
+        return self.bcast(0, parts, tag=(tag, "b"))
+
+    # -- identity ---------------------------------------------------------------
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}(np={self.np_}, pid={self.pid})"
+
+
+class LocalComm(CommContext):
+    """Np=1 context: message ops are in-memory self-sends."""
+
+    def __init__(self) -> None:
+        self.np_ = 1
+        self.pid = 0
+        self._box: dict[tuple, Any] = {}
+
+    def send(self, dest: int, tag: Any, obj: Any) -> None:
+        if dest != 0:
+            raise ValueError(f"LocalComm has a single rank; dest={dest}")
+        self._box[(0, _freeze(tag))] = obj
+
+    def recv(self, source: int, tag: Any, timeout: float | None = None) -> Any:
+        key = (source, _freeze(tag))
+        if key not in self._box:
+            raise StragglerTimeout(f"no local message with tag {tag!r}")
+        return self._box.pop(key)
+
+    def probe(self, source: int, tag: Any) -> bool:
+        return (source, _freeze(tag)) in self._box
+
+
+def _freeze(tag: Any):
+    if isinstance(tag, (list, tuple)):
+        return tuple(_freeze(t) for t in tag)
+    return tag
+
+
+# ---------------------------------------------------------------------------
+# Active-context management (pPython_init, paper §III.A)
+# ---------------------------------------------------------------------------
+
+_active = threading.local()
+_global_ctx: CommContext | None = None
+
+
+def init(ctx: CommContext | None = None) -> CommContext:
+    """pPython_init: install the active context.
+
+    With no argument, builds one from the environment pRUN sets
+    (``PPYTHON_NP``/``PPYTHON_PID``/``PPYTHON_COMM_DIR``) or falls back to a
+    single-rank LocalComm — which is what makes unmodified pPython programs
+    run serially on a laptop.
+    """
+    global _global_ctx
+    if ctx is None:
+        np_ = int(os.environ.get("PPYTHON_NP", "1"))
+        if np_ > 1:
+            from .filempi import FileMPI
+
+            ctx = FileMPI(
+                np_=np_,
+                pid=int(os.environ["PPYTHON_PID"]),
+                comm_dir=os.environ["PPYTHON_COMM_DIR"],
+            )
+        else:
+            ctx = LocalComm()
+    _global_ctx = ctx
+    return ctx
+
+
+def set_context(ctx: CommContext | None) -> None:
+    """Install a thread-local context (used by ThreadComm SPMD harnesses)."""
+    _active.ctx = ctx
+
+
+def get_context() -> CommContext:
+    ctx = getattr(_active, "ctx", None)
+    if ctx is not None:
+        return ctx
+    global _global_ctx
+    if _global_ctx is None:
+        init()
+    return _global_ctx
+
+
+def Np() -> int:
+    return get_context().np_
+
+
+def Pid() -> int:
+    return get_context().pid

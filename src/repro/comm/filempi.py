@@ -1,0 +1,203 @@
+"""FileMPI: the paper's file-based PythonMPI transport (paper §III.D).
+
+Messages are pickled to a shared directory and claimed by the receiver:
+
+* ``send`` writes ``<dir>/m_s<src>_d<dst>_q<seq>_<tag>.tmp`` then atomically
+  renames it to ``.buf`` — the rename is the "message posted" event, so a
+  reader can never observe a half-written payload.
+* ``recv`` polls for the expected ``.buf`` (per-(src,tag) sequence numbers
+  give FIFO ordering and let tags repeat), unpickles, and deletes it.
+* sends are **one-sided**: posting never waits for a matching receive, and
+  an unclaimed message sits on disk where it can be inspected — the paper's
+  debugging affordance.
+
+The paper initially serialized via h5py/HDF5 but switched to pickle because
+h5py cannot store complex NumPy arrays; we go straight to pickle (protocol
+5, zero-copy buffers for large arrays).
+
+Straggler handling beyond the paper: receives carry a deadline
+(``PPYTHON_RECV_TIMEOUT``, default 300 s) and every rank refreshes a
+heartbeat file; ``dead_ranks()`` surfaces peers whose heartbeat went stale
+so the launcher can restart them from the last checkpoint.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import pickle
+import threading
+import time
+from pathlib import Path
+from typing import Any
+
+from .context import DEFAULT_RECV_TIMEOUT, CommContext, StragglerTimeout
+
+__all__ = ["FileMPI"]
+
+_POLL_MIN = 0.0005
+_POLL_MAX = 0.05
+HEARTBEAT_PERIOD = 5.0
+
+
+def _tag_token(tag: Any) -> str:
+    """Filesystem-safe token for an arbitrary hashable tag."""
+    s = repr(tag)
+    if len(s) <= 40 and all(c.isalnum() or c in "._-" for c in s):
+        return s
+    return hashlib.sha1(s.encode()).hexdigest()[:16]
+
+
+class FileMPI(CommContext):
+    def __init__(self, np_: int, pid: int, comm_dir: str | os.PathLike,
+                 heartbeat: bool = True):
+        if not (0 <= pid < np_):
+            raise ValueError(f"pid {pid} out of range for np={np_}")
+        self.np_ = np_
+        self.pid = pid
+        self.dir = Path(comm_dir)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self._send_seq: dict[tuple[int, str], int] = {}
+        self._recv_seq: dict[tuple[int, str], int] = {}
+        self._hb_stop = threading.Event()
+        self._hb_thread: threading.Thread | None = None
+        if heartbeat:
+            self._start_heartbeat()
+
+    # -- point to point -------------------------------------------------------
+
+    def _msg_path(self, src: int, dst: int, tag: Any, seq: int) -> Path:
+        return self.dir / f"m_s{src}_d{dst}_q{seq}_{_tag_token(tag)}.buf"
+
+    def send(self, dest: int, tag: Any, obj: Any) -> None:
+        if not (0 <= dest < self.np_):
+            raise ValueError(f"dest {dest} out of range for np={self.np_}")
+        key = (dest, _tag_token(tag))
+        seq = self._send_seq.get(key, 0)
+        self._send_seq[key] = seq + 1
+        final = self._msg_path(self.pid, dest, tag, seq)
+        tmp = final.with_suffix(f".tmp{os.getpid()}")
+        with open(tmp, "wb") as f:
+            pickle.dump(obj, f, protocol=5)
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, final)  # atomic publish
+
+    def recv(self, source: int, tag: Any, timeout: float | None = None) -> Any:
+        if not (0 <= source < self.np_):
+            raise ValueError(f"source {source} out of range for np={self.np_}")
+        key = (source, _tag_token(tag))
+        seq = self._recv_seq.get(key, 0)
+        self._recv_seq[key] = seq + 1
+        path = self._msg_path(source, self.pid, tag, seq)
+        deadline = time.monotonic() + (
+            DEFAULT_RECV_TIMEOUT if timeout is None else timeout
+        )
+        pause = _POLL_MIN
+        while True:
+            if path.exists():
+                try:
+                    with open(path, "rb") as f:
+                        obj = pickle.load(f)
+                except (EOFError, FileNotFoundError):
+                    time.sleep(pause)
+                    continue
+                os.unlink(path)
+                return obj
+            if time.monotonic() > deadline:
+                dead = self.dead_ranks()
+                raise StragglerTimeout(
+                    f"rank {self.pid} timed out receiving {tag!r} (seq {seq}) "
+                    f"from rank {source}; stale-heartbeat ranks: {dead}"
+                )
+            time.sleep(pause)
+            pause = min(pause * 2, _POLL_MAX)
+
+    def probe(self, source: int, tag: Any) -> bool:
+        key = (source, _tag_token(tag))
+        seq = self._recv_seq.get(key, 0)
+        return self._msg_path(source, self.pid, tag, seq).exists()
+
+    # -- broadcast: single payload file, reference-counted --------------------
+
+    def bcast(self, root: int, obj: Any = None, tag: Any = "__pp_bcast") -> Any:
+        """One-file broadcast: the payload is written once and every receiver
+        reads it in place (MatlabMPI's trick); receivers drop a done-marker
+        and the last one reclaims the payload."""
+        if self.np_ == 1:
+            return obj
+        key = ("__bc", _tag_token(tag))
+        seq = self._send_seq.get(key, 0)
+        self._send_seq[key] = seq + 1
+        payload = self.dir / f"bc_r{root}_q{seq}_{_tag_token(tag)}.buf"
+        if self.pid == root:
+            tmp = payload.with_suffix(f".tmp{os.getpid()}")
+            with open(tmp, "wb") as f:
+                pickle.dump(obj, f, protocol=5)
+                f.flush()
+                os.fsync(f.fileno())
+            os.rename(tmp, payload)
+            return obj
+        deadline = time.monotonic() + DEFAULT_RECV_TIMEOUT
+        pause = _POLL_MIN
+        while not payload.exists():
+            if time.monotonic() > deadline:
+                raise StragglerTimeout(
+                    f"rank {self.pid} timed out on bcast {tag!r} from {root}"
+                )
+            time.sleep(pause)
+            pause = min(pause * 2, _POLL_MAX)
+        with open(payload, "rb") as f:
+            obj = pickle.load(f)
+        done = payload.with_suffix(f".done{self.pid}")
+        done.touch()
+        # last reader reclaims payload + markers (best-effort)
+        markers = list(self.dir.glob(payload.stem + ".done*"))
+        if len(markers) >= self.np_ - 1:
+            for m in markers + [payload]:
+                try:
+                    os.unlink(m)
+                except FileNotFoundError:
+                    pass
+        return obj
+
+    # -- liveness ---------------------------------------------------------------
+
+    def _hb_path(self, pid: int) -> Path:
+        return self.dir / f"hb_{pid}"
+
+    def _start_heartbeat(self) -> None:
+        def beat() -> None:
+            while not self._hb_stop.wait(HEARTBEAT_PERIOD):
+                try:
+                    self._hb_path(self.pid).touch()
+                except OSError:
+                    pass
+
+        self._hb_path(self.pid).touch()
+        self._hb_thread = threading.Thread(target=beat, daemon=True)
+        self._hb_thread.start()
+
+    def dead_ranks(self, max_age: float = 4 * HEARTBEAT_PERIOD) -> list[int]:
+        """Ranks whose heartbeat file is stale (or missing after startup)."""
+        now = time.time()
+        dead = []
+        for pid in range(self.np_):
+            if pid == self.pid:
+                continue
+            p = self._hb_path(pid)
+            try:
+                if now - p.stat().st_mtime > max_age:
+                    dead.append(pid)
+            except FileNotFoundError:
+                dead.append(pid)
+        return dead
+
+    def finalize(self) -> None:
+        self._hb_stop.set()
+        if self._hb_thread is not None:
+            self._hb_thread.join(timeout=1.0)
+        try:
+            os.unlink(self._hb_path(self.pid))
+        except FileNotFoundError:
+            pass

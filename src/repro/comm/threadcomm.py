@@ -1,0 +1,132 @@
+"""ThreadComm: in-process SPMD transport for tests and benchmarks.
+
+Semantically identical to FileMPI (one-sided sends, FIFO per (src,tag))
+but messages travel through in-memory queues, so a multi-rank pPython
+program can run inside one Python process.  ``run_spmd(fn, np_)`` launches
+``np_`` threads, installs each rank's context thread-locally, runs ``fn``
+as the SPMD body, and returns the per-rank results.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import defaultdict
+from typing import Any, Callable
+
+from .context import (
+    DEFAULT_RECV_TIMEOUT,
+    CommContext,
+    StragglerTimeout,
+    set_context,
+)
+
+__all__ = ["ThreadComm", "ThreadWorld", "run_spmd"]
+
+
+class ThreadWorld:
+    """Shared mailbox fabric for one SPMD execution."""
+
+    def __init__(self, np_: int):
+        self.np_ = np_
+        self._lock = threading.Condition()
+        # (src, dst, tag_token, seq) -> payload
+        self._box: dict[tuple, Any] = {}
+
+    def post(self, key: tuple, obj: Any) -> None:
+        with self._lock:
+            self._box[key] = obj
+            self._lock.notify_all()
+
+    def take(self, key: tuple, timeout: float) -> Any:
+        deadline = time.monotonic() + timeout
+        with self._lock:
+            while key not in self._box:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise StragglerTimeout(f"thread recv timed out on {key}")
+                self._lock.wait(min(remaining, 0.2))
+            return self._box.pop(key)
+
+    def peek(self, key: tuple) -> bool:
+        with self._lock:
+            return key in self._box
+
+
+def _freeze(tag: Any):
+    if isinstance(tag, (list, tuple)):
+        return tuple(_freeze(t) for t in tag)
+    return tag
+
+
+class ThreadComm(CommContext):
+    def __init__(self, world: ThreadWorld, pid: int):
+        self.world = world
+        self.np_ = world.np_
+        self.pid = pid
+        self._send_seq: dict[tuple, int] = defaultdict(int)
+        self._recv_seq: dict[tuple, int] = defaultdict(int)
+
+    def _key(self, src: int, dst: int, tag: Any, seq: int) -> tuple:
+        return (src, dst, _freeze(tag), seq)
+
+    def send(self, dest: int, tag: Any, obj: Any) -> None:
+        if not (0 <= dest < self.np_):
+            raise ValueError(f"dest {dest} out of range for np={self.np_}")
+        k = (dest, _freeze(tag))
+        seq = self._send_seq[k]
+        self._send_seq[k] = seq + 1
+        self.world.post(self._key(self.pid, dest, tag, seq), obj)
+
+    def recv(self, source: int, tag: Any, timeout: float | None = None) -> Any:
+        k = (source, _freeze(tag))
+        seq = self._recv_seq[k]
+        self._recv_seq[k] = seq + 1
+        return self.world.take(
+            self._key(source, self.pid, tag, seq),
+            DEFAULT_RECV_TIMEOUT if timeout is None else timeout,
+        )
+
+    def probe(self, source: int, tag: Any) -> bool:
+        k = (source, _freeze(tag))
+        seq = self._recv_seq[k]
+        return self.world.peek(self._key(source, self.pid, tag, seq))
+
+
+def run_spmd(
+    fn: Callable[..., Any],
+    np_: int,
+    args: tuple = (),
+    timeout: float = 120.0,
+) -> list[Any]:
+    """Run ``fn(*args)`` as an SPMD body on ``np_`` thread-ranks.
+
+    Each thread sees its own rank via the active comm context
+    (``repro.comm.Np()/Pid()``); results are returned rank-ordered.
+    Exceptions in any rank are re-raised in the caller.
+    """
+    world = ThreadWorld(np_)
+    results: list[Any] = [None] * np_
+    errors: list[BaseException | None] = [None] * np_
+
+    def body(pid: int) -> None:
+        set_context(ThreadComm(world, pid))
+        try:
+            results[pid] = fn(*args)
+        except BaseException as e:  # noqa: BLE001 - surfaced to caller
+            errors[pid] = e
+        finally:
+            set_context(None)
+
+    threads = [threading.Thread(target=body, args=(pid,)) for pid in range(np_)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout)
+    for t in threads:
+        if t.is_alive():
+            raise StragglerTimeout("SPMD thread body did not finish in time")
+    for e in errors:
+        if e is not None:
+            raise e
+    return results

@@ -1,0 +1,82 @@
+"""pPython core: PGAS distributed arrays (the paper's primary contribution).
+
+``Dmap`` (the map construct) + ``Dmat`` (the distributed array) +
+PITFALLS (the redistribution index algebra) + the parallel support
+functions.  Pure NumPy — the JAX lowering lives in ``jax_bridge`` and is
+imported lazily so SPMD file-MPI workers never pay the JAX import.
+"""
+
+from .dmap import Dmap
+from .dmat import Dmat, redistribute
+from .ops import (
+    agg,
+    agg_all,
+    arange_field,
+    barrier,
+    dcomplex,
+    fft,
+    global_block_range,
+    global_block_ranges,
+    global_ind,
+    grid,
+    inmap,
+    local,
+    ones,
+    put_local,
+    rand,
+    randn,
+    scatter,
+    sprand,
+    synch,
+    transpose_grid,
+    zeros,
+)
+from .pitfalls import (
+    FALLS,
+    block_cyclic_falls,
+    block_falls,
+    cyclic_falls,
+    dist_falls,
+    falls_indices,
+    falls_intersect,
+    falls_list_intersect,
+    falls_list_size,
+    intersect_ranks,
+)
+
+__all__ = [
+    "Dmap",
+    "Dmat",
+    "redistribute",
+    "FALLS",
+    "falls_indices",
+    "falls_intersect",
+    "falls_list_intersect",
+    "falls_list_size",
+    "block_falls",
+    "cyclic_falls",
+    "block_cyclic_falls",
+    "dist_falls",
+    "intersect_ranks",
+    "zeros",
+    "ones",
+    "rand",
+    "randn",
+    "arange_field",
+    "dcomplex",
+    "sprand",
+    "fft",
+    "local",
+    "put_local",
+    "agg",
+    "agg_all",
+    "scatter",
+    "global_block_range",
+    "global_block_ranges",
+    "global_ind",
+    "grid",
+    "inmap",
+    "synch",
+    "barrier",
+    "transpose_grid",
+]

@@ -1,0 +1,412 @@
+"""``Dmat`` — pPython's distributed numerical array (paper §II, §III).
+
+Each SPMD rank holds only its *local part* (owned indices + overlap halo),
+laid out in sorted-global-index order per dimension.  The communication
+operator is subscripted assignment: ``Z[:, :] = X`` redistributes between
+any two block/cyclic/block-cyclic(-overlapped) maps, with the message
+schedule computed by PITFALLS and executed over the active PythonMPI
+context.
+
+Fragmented-PGAS surface (paper §II.C): constructors, index support
+functions, element-wise arithmetic — and deliberately not a full
+distributed NumPy.  Everything also works with maps "turned off" (plain
+ndarrays) so a program can be debugged serially.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import numpy as np
+
+from ..comm import get_context
+from ..comm.context import CommContext
+from .dmap import Dmap
+from .pitfalls import falls_list_indices, falls_list_intersect
+
+__all__ = ["Dmat", "redistribute"]
+
+
+def _ctx_counter(ctx: CommContext, name: str) -> int:
+    """SPMD-aligned per-context counter (all ranks run the same program)."""
+    counters = getattr(ctx, "_pp_counters", None)
+    if counters is None:
+        counters = {}
+        ctx._pp_counters = counters
+    val = counters.get(name, 0)
+    counters[name] = val + 1
+    return val
+
+
+class Dmat:
+    """Distributed array: global ``shape``/``dtype`` + per-rank local part."""
+
+    __array_priority__ = 100  # win ufunc dispatch over ndarray
+
+    def __init__(
+        self,
+        shape: Sequence[int],
+        dmap: Dmap,
+        dtype=np.float64,
+        ctx: CommContext | None = None,
+        _alloc: bool = True,
+    ):
+        self.shape = tuple(int(s) for s in shape)
+        if len(self.shape) != dmap.ndim:
+            raise ValueError(
+                f"array rank {len(self.shape)} != map rank {dmap.ndim}"
+            )
+        self.dmap = dmap
+        self.dtype = np.dtype(dtype)
+        self.ctx = ctx if ctx is not None else get_context()
+        # owned-index arrays are computed lazily: element-wise ops build
+        # result Dmats constantly and must not pay O(n) index bookkeeping
+        # per op (the paper's §V "inefficient array indexing" lesson)
+        self.__owned: list[np.ndarray] | None = None
+        self.__halo: list[int] | None = None
+        self.local = (
+            np.zeros(self.local_shape_with_halo(), dtype=self.dtype)
+            if _alloc
+            else None
+        )
+
+    def _index_cache(self):
+        if self.__owned is None:
+            pid = self.ctx.pid
+            dmap = self.dmap
+            if dmap.inmap(pid):
+                self.__owned = [
+                    dmap.local_indices(self.shape, d, pid)
+                    for d in range(dmap.ndim)
+                ]
+                self.__halo = [
+                    dmap.halo_extent(self.shape, d, pid)
+                    for d in range(dmap.ndim)
+                ]
+            else:
+                self.__owned = [np.empty(0, dtype=np.int64) for _ in self.shape]
+                self.__halo = [0 for _ in self.shape]
+        return self.__owned, self.__halo
+
+    @property
+    def _owned(self) -> list:
+        return self._index_cache()[0]
+
+    @property
+    def _halo(self) -> list:
+        return self._index_cache()[1]
+
+    def local_shape_with_halo(self) -> tuple[int, ...]:
+        owned, halo = self._index_cache()
+        return tuple(len(ix) + h for ix, h in zip(owned, halo))
+
+    # -- basic introspection ---------------------------------------------------
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def pid(self) -> int:
+        return self.ctx.pid
+
+    def owned_indices(self, dim: int) -> np.ndarray:
+        """Sorted owned global indices along ``dim`` for this rank."""
+        return self._owned[dim]
+
+    def local_view_owned(self) -> np.ndarray:
+        """Local buffer with halo stripped (the owned region)."""
+        slc = tuple(
+            slice(0, len(ix)) for ix in self._owned
+        )
+        return self.local[slc]
+
+    def global_block_range(self, dim: int, pid: int | None = None) -> tuple[int, int]:
+        return self.dmap.global_block_range(
+            self.shape, dim, self.pid if pid is None else pid
+        )
+
+    def global_block_ranges(self, dim: int) -> list[tuple[int, int, int]]:
+        """(pid, start, stop) for every rank of the map along ``dim``."""
+        return [
+            (p, *self.dmap.global_block_range(self.shape, dim, p))
+            for p in self.dmap.proclist
+        ]
+
+    # -- global <-> local index maps --------------------------------------------
+
+    def _local_positions(self, dim: int, global_idx: np.ndarray) -> np.ndarray:
+        """Local storage positions of (owned) global indices along ``dim``."""
+        owned = self._owned[dim]
+        pos = np.searchsorted(owned, global_idx)
+        if np.any(pos >= len(owned)) or np.any(owned[pos] != global_idx):
+            raise IndexError(
+                f"global indices not owned by rank {self.pid} along dim {dim}"
+            )
+        return pos
+
+    # -- element-wise arithmetic (fragmented PGAS) -------------------------------
+
+    def _binary(self, other, op, reflected: bool = False) -> "Dmat":
+        out = Dmat(self.shape, self.dmap, dtype=None, ctx=self.ctx, _alloc=False)
+        if isinstance(other, Dmat):
+            if other.dmap != self.dmap or other.shape != self.shape:
+                raise ValueError(
+                    "element-wise ops require identical maps (fragmented PGAS); "
+                    "redistribute first with A[:, :] = B"
+                )
+            rhs = other.local
+        elif np.isscalar(other) or isinstance(other, np.ndarray):
+            rhs = other
+        else:
+            return NotImplemented
+        out.local = op(rhs, self.local) if reflected else op(self.local, rhs)
+        out.dtype = out.local.dtype
+        return out
+
+    def __add__(self, o):  # noqa: D105
+        return self._binary(o, np.add)
+
+    def __radd__(self, o):
+        return self._binary(o, np.add, reflected=True)
+
+    def __sub__(self, o):
+        return self._binary(o, np.subtract)
+
+    def __rsub__(self, o):
+        return self._binary(o, np.subtract, reflected=True)
+
+    def __mul__(self, o):
+        return self._binary(o, np.multiply)
+
+    def __rmul__(self, o):
+        return self._binary(o, np.multiply, reflected=True)
+
+    def __truediv__(self, o):
+        return self._binary(o, np.divide)
+
+    def __rtruediv__(self, o):
+        return self._binary(o, np.divide, reflected=True)
+
+    def __pow__(self, o):
+        return self._binary(o, np.power)
+
+    def __neg__(self):
+        out = Dmat(self.shape, self.dmap, dtype=self.dtype, ctx=self.ctx, _alloc=False)
+        out.local = -self.local
+        return out
+
+    def __abs__(self):
+        out = Dmat(self.shape, self.dmap, dtype=self.dtype, ctx=self.ctx, _alloc=False)
+        out.local = np.abs(self.local)
+        out.dtype = out.local.dtype
+        return out
+
+    # -- global reductions ---------------------------------------------------------
+
+    def _allreduce(self, local_val, op) -> Any:
+        vals = self.ctx.allgather(local_val, tag="__pp_red")
+        # ranks outside the map contribute identity-free entries (None)
+        vals = [v for v in vals if v is not None]
+        out = vals[0]
+        for v in vals[1:]:
+            out = op(out, v)
+        return out
+
+    def sum(self):
+        own = self.local_view_owned()
+        loc = own.sum() if own.size else None
+        return self._allreduce(loc, lambda a, b: a + b)
+
+    def max(self):
+        own = self.local_view_owned()
+        loc = own.max() if own.size else None
+        return self._allreduce(loc, max)
+
+    def min(self):
+        own = self.local_view_owned()
+        loc = own.min() if own.size else None
+        return self._allreduce(loc, min)
+
+    # -- subscripted assignment: THE communication operator ------------------------
+
+    def __setitem__(self, key, value) -> None:
+        region = _parse_region(key, self.shape)
+        if isinstance(value, Dmat):
+            redistribute(self, value, region)
+        elif np.isscalar(value):
+            self._fill_region(region, value)
+        elif isinstance(value, np.ndarray):
+            self._assign_global_array(region, value)
+        else:
+            raise TypeError(f"cannot assign {type(value)} to Dmat")
+
+    def _region_local(self, region):
+        """Per-dim (local positions, global indices) of owned ∩ region."""
+        pos, gidx = [], []
+        for d, (start, stop) in enumerate(region):
+            owned = self._owned[d]
+            lo = np.searchsorted(owned, start)
+            hi = np.searchsorted(owned, stop)
+            pos.append(np.arange(lo, hi))
+            gidx.append(owned[lo:hi])
+        return pos, gidx
+
+    def _fill_region(self, region, scalar) -> None:
+        pos, _ = self._region_local(region)
+        if all(len(p) for p in pos):
+            self.local[np.ix_(*pos)] = scalar
+
+    def _assign_global_array(self, region, arr: np.ndarray) -> None:
+        rshape = tuple(stop - start for start, stop in region)
+        if arr.shape != rshape:
+            raise ValueError(f"value shape {arr.shape} != region shape {rshape}")
+        pos, gidx = self._region_local(region)
+        if all(len(p) for p in pos):
+            take = np.ix_(*[g - start for g, (start, _) in zip(gidx, region)])
+            self.local[np.ix_(*pos)] = arr[take]
+
+    def __getitem__(self, key):
+        region = _parse_region(key, self.shape)
+        pos, gidx = self._region_local(region)
+        rshape = tuple(stop - start for start, stop in region)
+        covered = all(
+            len(g) == (stop - start)
+            for g, (start, stop) in zip(gidx, region)
+        )
+        if not covered:
+            raise IndexError(
+                "region not fully local to this rank; use local(A) for the "
+                "local part or agg(A) to gather the global array"
+            )
+        out = self.local[np.ix_(*pos)].reshape(rshape)
+        return out[()] if out.ndim == 0 else out
+
+    # -- misc ---------------------------------------------------------------------
+
+    def astype(self, dtype) -> "Dmat":
+        out = Dmat(self.shape, self.dmap, dtype=dtype, ctx=self.ctx, _alloc=False)
+        out.local = self.local.astype(dtype)
+        return out
+
+    def copy(self) -> "Dmat":
+        out = Dmat(self.shape, self.dmap, dtype=self.dtype, ctx=self.ctx, _alloc=False)
+        out.local = self.local.copy()
+        return out
+
+    def __repr__(self) -> str:
+        return (
+            f"Dmat(shape={self.shape}, dtype={self.dtype}, pid={self.pid}, "
+            f"local={self.local.shape}, map={self.dmap})"
+        )
+
+
+def _parse_region(key, shape) -> list[tuple[int, int]]:
+    """Normalize a subscript into per-dim half-open global ranges."""
+    if not isinstance(key, tuple):
+        key = (key,)
+    if len(key) != len(shape):
+        raise IndexError(
+            f"subscript must index all {len(shape)} dims (got {len(key)}); "
+            "pPython subsasgn is region-based"
+        )
+    region = []
+    for k, n in zip(key, shape):
+        if isinstance(k, slice):
+            start, stop, step = k.indices(n)
+            if step != 1:
+                raise IndexError("strided subscripts are not supported")
+            region.append((start, stop))
+        elif isinstance(k, (int, np.integer)):
+            k = int(k) % n
+            region.append((k, k + 1))
+        else:
+            raise IndexError(f"unsupported subscript component {k!r}")
+    return region
+
+
+# -----------------------------------------------------------------------------
+# Redistribution (PITFALLS-scheduled, PythonMPI-executed)
+# -----------------------------------------------------------------------------
+
+
+def redistribute(dst: Dmat, src: Dmat, region=None) -> None:
+    """``dst[region] = src``: general block-cyclic redistribution.
+
+    ``region`` is the per-dim half-open target window in dst's global index
+    space (defaults to the whole array); ``src`` global index ``g`` lands at
+    dst index ``g + region_start`` per dim.  PITFALLS computes, for every
+    (sender, receiver) pair, the exact per-dim index sets to move; payloads
+    are the cross-product blocks in sorted-global order.  All sends are
+    posted before any receive (the transports are one-sided), so no
+    ordering can deadlock.
+    """
+    if region is None:
+        region = [(0, n) for n in src.shape]
+    rshape = tuple(stop - start for start, stop in region)
+    if rshape != src.shape:
+        raise ValueError(
+            f"target region shape {rshape} != source shape {src.shape}"
+        )
+    if len(src.shape) != len(dst.shape):
+        raise ValueError("rank mismatch in redistribution")
+    ctx = dst.ctx
+    me = ctx.pid
+    tag_base = ("__redist", _ctx_counter(ctx, "redist"))
+    offsets = [start for start, _ in region]
+
+    src_ranks = src.dmap.proclist
+    dst_ranks = dst.dmap.proclist
+
+    def pair_indices(s_rank: int, d_rank: int):
+        """Per-dim global dst-space indices exchanged by (s_rank, d_rank)."""
+        out = []
+        for d in range(dst.ndim):
+            src_falls = src.dmap.dim_falls(src.shape, d, s_rank)
+            # shift source index space into the dst window
+            off = offsets[d]
+            shifted = [
+                type(f)(f.l + off, f.r + off, f.s, f.n) for f in src_falls
+            ]
+            dst_falls = dst.dmap.dim_falls(dst.shape, d, d_rank)
+            # clip dst ownership to the target window
+            lo, hi = region[d]
+            hit = falls_list_intersect(shifted, dst_falls)
+            idx = falls_list_indices(hit)
+            idx = idx[(idx >= lo) & (idx < hi)]
+            if len(idx) == 0:
+                return None
+            out.append(idx)
+        return out
+
+    # -- post all sends ---------------------------------------------------------
+    if src.dmap.inmap(me):
+        for d_rank in dst_ranks:
+            idx = pair_indices(me, d_rank)
+            if idx is None:
+                continue
+            src_pos = [
+                src._local_positions(d, g - offsets[d])
+                for d, g in enumerate(idx)
+            ]
+            block = src.local[np.ix_(*src_pos)]
+            if d_rank == me:
+                _place(dst, idx, block)
+            else:
+                ctx.send(d_rank, (tag_base, me), block)
+
+    # -- drain receives -----------------------------------------------------------
+    if dst.dmap.inmap(me):
+        for s_rank in src_ranks:
+            if s_rank == me:
+                continue  # handled as the local copy above
+            idx = pair_indices(s_rank, me)
+            if idx is None:
+                continue
+            block = ctx.recv(s_rank, (tag_base, s_rank))
+            _place(dst, idx, block)
+
+
+def _place(dst: Dmat, idx_global, block: np.ndarray) -> None:
+    dst_pos = [dst._local_positions(d, g) for d, g in enumerate(idx_global)]
+    dst.local[np.ix_(*dst_pos)] = block

@@ -1,0 +1,139 @@
+"""Flash attention as a Pallas TPU kernel.
+
+TPU-native adaptation of the FlashAttention idea (DESIGN.md §7): the
+online-softmax tiling is reshaped around the TPU memory hierarchy —
+q/k/v blocks live in VMEM via BlockSpecs, the (blk_q × blk_k) logits are
+MXU-shaped (multiples of 128), and the kv dimension is the innermost
+*sequential* grid axis so the running (m, l, acc) state persists in VMEM
+scratch across kv steps (TPU grids execute in order, unlike CUDA thread
+blocks — this replaces the CUDA shared-memory reduction entirely).
+
+Causal skipping: kv blocks strictly above the diagonal are masked-out via
+``pl.when`` so their matmuls never execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,  # (1, blk_q, d), (1, blk_k, d), (1, blk_k, d)
+    o_ref,                # (1, blk_q, d)
+    m_ref, l_ref, acc_ref,  # VMEM scratch: (blk_q, 128), (blk_q, 128), (blk_q, d)
+    *,
+    scale: float,
+    causal: bool,
+    blk_q: int,
+    blk_k: int,
+    kv_steps: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = (not causal) or (ki * blk_k <= qi * blk_q + blk_q - 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale        # (blk_q, d)
+        k = k_ref[0].astype(jnp.float32)                # (blk_k, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (blk_q, blk_k)
+        if causal:
+            rows = qi * blk_q + jax.lax.broadcasted_iota(
+                jnp.int32, (blk_q, blk_k), 0
+            )
+            cols = ki * blk_k + jax.lax.broadcasted_iota(
+                jnp.int32, (blk_q, blk_k), 1
+            )
+            s = jnp.where(rows >= cols, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]                            # (blk_q, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)                  # (blk_q, 1)
+        p = jnp.exp(s - m_new)                           # (blk_q, blk_k)
+        l_new = l_ref[:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ki == kv_steps - 1)
+    def _finish():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows (shouldn't occur)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "blk_q", "blk_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # (BH, S, D)
+    k: jax.Array,  # (BH, T, D)
+    v: jax.Array,  # (BH, T, D)
+    *,
+    causal: bool = True,
+    blk_q: int = 128,
+    blk_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused attention over flattened (batch*heads, seq, head_dim).
+
+    Sequence lengths must be multiples of the block sizes (the ops.py
+    wrapper pads); head_dim should be a multiple of 128 on real TPUs
+    (VMEM lane width) — interpret mode accepts anything.
+    """
+    bh, s, d = q.shape
+    t = k.shape[1]
+    if s % blk_q or t % blk_k:
+        raise ValueError(f"seq {s}/{t} not divisible by blocks {blk_q}/{blk_k}")
+    kv_steps = t // blk_k
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        blk_q=blk_q,
+        blk_k=blk_k,
+        kv_steps=kv_steps,
+    )
+    grid = (bh, s // blk_q, kv_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_q, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, blk_k, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, blk_k, d), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, d), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, 128), jnp.float32),  # running max m
+            pltpu.VMEM((blk_q, 128), jnp.float32),  # running denom l
+            pltpu.VMEM((blk_q, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

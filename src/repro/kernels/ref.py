@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each function is the mathematically-direct implementation; kernel tests
+sweep shapes/dtypes and assert allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["attention_ref", "triad_ref", "rmsnorm_ref", "ssd_ref"]
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q/k/v: (B, H, S, D) -> (B, H, S, D), fp32 softmax."""
+    d = q.shape[-1]
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) / np.sqrt(d)
+    if causal:
+        s = q.shape[2]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def triad_ref(b, c, s: float):
+    """STREAM triad: a = b + s*c (the paper's Fig. 2 core op)."""
+    return b + s * c
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-5):
+    """x: (..., D); w: (D,).  Matches repro.models.layers.rms_norm."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def ssd_ref(x, dt, a_log, bm, cm, chunk: int = 64):
+    """Oracle: the model's own chunked SSD (itself proven equal to the
+    sequential recurrence in tests/test_chunked_ops.py)."""
+    from ..models.mamba2 import ssd_chunked
+
+    return ssd_chunked(x, dt, a_log, bm, cm, chunk)

@@ -1,0 +1,48 @@
+"""STREAM triad as a Pallas TPU kernel: ``a = b + s * c``.
+
+The paper's own memory-roofline probe (Fig. 2/7) rebuilt for the TPU
+memory hierarchy: each grid step streams one (rows × 1024) tile
+HBM→VMEM, does the fused multiply-add on the VPU, and streams the result
+back — arithmetic intensity 1/12 flops/byte, i.e. purely HBM-bandwidth
+bound, which is exactly what STREAM is for.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 1024  # tile width (multiple of the 128-lane VPU width)
+
+
+def _triad_kernel(b_ref, c_ref, a_ref, *, s: float):
+    a_ref[...] = b_ref[...] + s * c_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("s", "blk_rows", "interpret"))
+def stream_triad(
+    b: jax.Array,  # (M, LANES)
+    c: jax.Array,
+    *,
+    s: float = 3.0,
+    blk_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """b/c: (M, 1024) with M a multiple of blk_rows (ops.py pads)."""
+    m, lanes = b.shape
+    if lanes != LANES or m % blk_rows:
+        raise ValueError(f"shape {b.shape} not (k*{blk_rows}, {LANES})")
+    return pl.pallas_call(
+        functools.partial(_triad_kernel, s=s),
+        grid=(m // blk_rows,),
+        in_specs=[
+            pl.BlockSpec((blk_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((blk_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk_rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(b.shape, b.dtype),
+        interpret=interpret,
+    )(b, c)

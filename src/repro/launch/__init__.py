@@ -1,0 +1,5 @@
+"""Launchers: pRUN (SPMD over PythonMPI), Slurm interface, TPU mesh/dry-run."""
+
+from .prun import pRUN, prun_worker
+
+__all__ = ["pRUN", "prun_worker"]

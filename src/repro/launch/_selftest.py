@@ -1,0 +1,60 @@
+"""SPMD self-test bodies launched via ``pRUN('repro.launch._selftest:fn', np)``.
+
+These run in real subprocesses over the file-based PythonMPI — the paper's
+actual transport — and return values through the pRUN result mailbox.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import repro.core as pp
+from repro.comm import Np, Pid, get_context
+from repro.core import Dmap
+
+
+def pingpong() -> float:
+    """Rank 0 <-> rank 1 round trip; returns payload checksum on rank 0."""
+    ctx = get_context()
+    payload = np.arange(1000.0) * (Pid() + 1)
+    if Pid() == 0:
+        ctx.send(1, "ping", payload)
+        back = ctx.recv(1, "pong")
+        return float(back.sum())
+    if Pid() == 1:
+        got = ctx.recv(0, "ping")
+        ctx.send(0, "pong", got * 2.0)
+    return -1.0
+
+
+def bcast_barrier() -> float:
+    ctx = get_context()
+    val = ctx.bcast(0, {"blob": np.ones(64) * 7.0} if Pid() == 0 else None)
+    ctx.barrier()
+    return float(val["blob"].sum())
+
+
+def redistribute_field() -> list | None:
+    """Corner-turn redistribution across real processes + file messages."""
+    world = Np()
+    src_map = Dmap([world, 1], {}, range(world))
+    dst_map = Dmap([1, world], "c", range(world))
+    x = pp.arange_field(9, 10, map=src_map)
+    z = pp.zeros(9, 10, map=dst_map)
+    z[:, :] = x
+    full = pp.agg(z, root=0)
+    get_context().barrier()
+    return None if full is None else full.tolist()
+
+
+def complex_messages() -> bool:
+    """The paper's h5py pain point: complex arrays must round-trip (pickle)."""
+    ctx = get_context()
+    if Pid() == 0:
+        z = np.exp(1j * np.linspace(0, 3, 257)).reshape(-1)
+        ctx.send(1 % Np(), "cx", z)
+        return True
+    if Pid() == 1:
+        z = ctx.recv(0, "cx")
+        return bool(np.iscomplexobj(z) and z.shape == (257,))
+    return True

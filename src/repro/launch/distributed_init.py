@@ -1,0 +1,44 @@
+"""Multi-host JAX runtime bootstrap (TPU pod slices).
+
+Invoked per host by the scheduler scripts (``repro.launch.slurm``):
+initializes ``jax.distributed`` from REPRO_COORD/REPRO_NUM_HOSTS/
+REPRO_HOST_ID and then executes the target (``module:function`` or a
+script path) under the fully-assembled multi-host runtime, where
+``jax.devices()`` spans every chip of the slice and the production mesh
+from ``repro.launch.mesh`` lays pod/data/model axes over them.
+"""
+
+from __future__ import annotations
+
+import importlib
+import os
+import runpy
+import sys
+
+
+def main(argv: list[str]) -> int:
+    coord = os.environ.get("REPRO_COORD")
+    n_hosts = int(os.environ.get("REPRO_NUM_HOSTS", "1"))
+    host_id = int(os.environ.get("REPRO_HOST_ID", "0"))
+    if coord and n_hosts > 1:
+        import jax
+
+        jax.distributed.initialize(
+            coordinator_address=coord,
+            num_processes=n_hosts,
+            process_id=host_id,
+        )
+    target = argv[0]
+    rest = argv[1:]
+    if ":" in target and not os.path.exists(target):
+        mod_name, fn_name = target.split(":", 1)
+        fn = getattr(importlib.import_module(mod_name), fn_name)
+        fn(*rest)
+    else:
+        sys.argv = [target, *rest]
+        runpy.run_path(target, run_name="__main__")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -1,0 +1,479 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first: JAX locks the device count at first
+initialization, and the production meshes (16×16 single-pod, 2×16×16
+multi-pod) need 512 host-platform placeholder devices.  Only this entry
+point pins the count — tests and benches see the real single device.
+
+Per cell this produces, from the compiled artifact alone (no execution):
+  * ``memory_analysis()``  — per-device argument/output/temp bytes (fits?)
+  * ``cost_analysis()``    — per-device HLO FLOPs + bytes accessed
+  * the collective schedule parsed from the partitioned HLO, converted to
+    per-device link bytes (ring-algorithm factors per op)
+and appends a JSON record consumed by ``benchmarks/roofline.py``.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out f.jsonl]
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import SHAPES, cell_applicable, get_config, list_archs  # noqa: E402
+from ..dist.hints import mesh_context  # noqa: E402
+from ..dist.sharding import (  # noqa: E402
+    batch_shardings,
+    decode_state_shardings,
+    dp_axes,
+    logits_sharding,
+    opt_state_shardings,
+    param_shardings,
+    spec_via_dmap,
+)
+from ..models.config import ModelConfig  # noqa: E402
+from ..models.model import abstract_decode_state, abstract_params  # noqa: E402
+from ..serve.engine import make_prefill_step, make_serve_step  # noqa: E402
+from ..train.optimizer import AdamWConfig  # noqa: E402
+from ..train.train_step import TrainStepConfig, make_train_step  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+
+# baseline grad-accum microbatch counts per arch for train_4k (chosen so
+# per-device layer-boundary activations stay ~<=3 GB; see EXPERIMENTS.md)
+MICROBATCHES = {
+    "qwen2-vl-72b": 16,
+    "qwen3-moe-235b-a22b": 16,
+    "nemotron-4-15b": 8,
+    "zamba2-2.7b": 8,
+    "qwen2-7b": 4,
+    "minicpm-2b": 4,
+    "musicgen-medium": 4,
+    "deepseek-moe-16b": 4,
+    "rwkv6-1.6b": 4,
+    "gemma-2b": 2,
+}
+
+
+def input_specs(cfg: ModelConfig, kind: str, batch: int, seq: int) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    i32 = jnp.int32
+    specs: dict = {}
+    if kind in ("train", "prefill"):
+        if cfg.frontend:
+            specs["inputs_embeds"] = jax.ShapeDtypeStruct(
+                (batch, seq, cfg.d_model), jnp.bfloat16
+            )
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((batch, seq), i32)
+        if kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((batch, seq), i32)
+        if cfg.pos_embedding == "mrope":
+            specs["positions"] = jax.ShapeDtypeStruct((3, batch, seq), i32)
+    elif kind == "decode":
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, 1), i32)
+        specs["pos"] = jax.ShapeDtypeStruct((), i32)
+    return specs
+
+
+def _microbatches(arch: str, batch: int, dp_total: int) -> int:
+    mb = MICROBATCHES.get(arch, 4)
+    # each microbatch must still cover the data axes
+    while mb > 1 and (batch // mb) % dp_total:
+        mb //= 2
+    return max(1, min(mb, batch))
+
+
+# ---------------------------------------------------------------------------
+# Collective-schedule parsing (per-device link bytes)
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9\[\],{}<=>TE()]+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(",
+)
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def collective_link_bytes(hlo_text: str, n_devices: int) -> dict:
+    """Per-device link bytes by op kind, ring-algorithm accounting:
+
+    all-gather: result*(N-1)/N   reduce-scatter: operand*(N-1)/N ~ result*(N-1)
+    all-reduce: 2*size*(N-1)/N   all-to-all: size*(N-1)/N
+    collective-permute: size
+    """
+    sums: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        type_str, op, _ = m.groups()
+        size = _shape_bytes(type_str)
+        n = _group_size(line, n_devices)
+        if op == "all-gather":
+            b = size * (n - 1) / max(n, 1)
+        elif op == "reduce-scatter":
+            b = size * (n - 1)
+        elif op == "all-reduce":
+            b = 2 * size * (n - 1) / max(n, 1)
+        elif op == "all-to-all":
+            b = size * (n - 1) / max(n, 1)
+        else:  # collective-permute
+            b = size
+        sums[op] = sums.get(op, 0.0) + b
+        count[op] = count.get(op, 0) + 1
+    sums["total"] = sum(v for k, v in sums.items() if k != "total")
+    return {"bytes": sums, "count": count}
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+
+def _lower_and_compile(cfg, cell, mesh, microbatches, remat,
+                       grad_compression="none"):
+    """Lower + compile one cell body for a given config; returns
+    (lowered, compiled)."""
+    dp = dp_axes(mesh)
+    dp_total = mesh.shape["data"] * (mesh.shape.get("pod", 1))
+    params_sh = param_shardings(cfg, mesh)
+    params_abs = abstract_params(cfg)
+    mb = 1
+    with mesh_context(mesh):
+        if cell.kind == "train":
+            mb = microbatches
+            mb_local = max(1, cell.batch // mb // dp_total)
+            ts = TrainStepConfig(microbatches=mb, remat=remat,
+                                 grad_compression=grad_compression,
+                                 sp=mb_local >= 4)
+            opt = AdamWConfig(schedule="wsd" if cfg.wsd_schedule else "cosine")
+            step = make_train_step(cfg, opt, ts, grad_shardings=params_sh)
+            opt_sh = opt_state_shardings(cfg, mesh)
+            batch_sh = batch_shardings(cfg, mesh, "train", cell.batch)
+            specs = input_specs(cfg, "train", cell.batch, cell.seq)
+            opt_abs = {
+                "m": jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params_abs
+                ),
+                "v": jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params_abs
+                ),
+                "step": jax.ShapeDtypeStruct((), jnp.int32),
+            }
+            jitted = jax.jit(
+                step,
+                in_shardings=(params_sh, opt_sh, batch_sh),
+                out_shardings=(params_sh, opt_sh, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_abs, opt_abs, specs)
+        elif cell.kind == "prefill":
+            step = make_prefill_step(cfg)
+            batch_sh = batch_shardings(cfg, mesh, "prefill", cell.batch)
+            specs = input_specs(cfg, "prefill", cell.batch, cell.seq)
+            jitted = jax.jit(
+                step,
+                in_shardings=(params_sh, batch_sh),
+                out_shardings=logits_sharding(cfg, mesh, cell.batch),
+            )
+            lowered = jitted.lower(params_abs, specs)
+        else:  # decode
+            step = make_serve_step(cfg)
+            state_abs = abstract_decode_state(cfg, cell.batch, cell.seq)
+            state_sh = decode_state_shardings(cfg, mesh, cell.batch, cell.seq)
+            tok_sh = NamedSharding(
+                mesh, spec_via_dmap(mesh, (cell.batch, 1), [dp, None])
+            )
+            pos_sh = NamedSharding(mesh, P())
+            specs = input_specs(cfg, "decode", cell.batch, cell.seq)
+            jitted = jax.jit(
+                step,
+                in_shardings=(params_sh, state_sh, tok_sh, pos_sh),
+                out_shardings=(logits_sharding(cfg, mesh, cell.batch), state_sh),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(
+                params_abs, state_abs, specs["tokens"], specs["pos"]
+            )
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def _reduced_layer_pair(cfg) -> tuple[int, int]:
+    """Two small layer counts for the scan-FLOPs extrapolation."""
+    if cfg.family == "hybrid":
+        e = cfg.hybrid_attn_every
+        return e, 2 * e
+    return 2, 4
+
+
+def _cost_fields(compiled, n_dev: int) -> dict:
+    cost = compiled.cost_analysis() or {}
+    coll = collective_link_bytes(compiled.as_text(), n_dev)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "transcendentals": float(cost.get("transcendentals", 0.0)),
+        "collective_bytes": float(coll["bytes"]["total"]),
+        "collectives": coll,
+    }
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool = False,
+               microbatches: int | None = None,
+               remat: bool = True,
+               extrapolate: bool = True,
+               grad_compression: str = "none") -> dict:
+    import dataclasses
+
+    cfg = get_config(arch)
+    cell = SHAPES[shape_name]
+    if not cell_applicable(cfg, shape_name):
+        return {
+            "arch": arch, "shape": shape_name,
+            "mesh": "multi" if multi_pod else "single",
+            "status": "skipped",
+            "reason": "full attention at 524k decode (DESIGN.md §5)",
+        }
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    dp_total = mesh.shape["data"] * (mesh.shape.get("pod", 1))
+    mb = 1
+    if cell.kind == "train":
+        mb = microbatches or _microbatches(arch, cell.batch, dp_total)
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "kind": cell.kind,
+        "n_devices": n_dev,
+        "batch": cell.batch,
+        "seq": cell.seq,
+        "status": "ok",
+        "microbatches": mb,
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+    }
+
+    record["grad_compression"] = grad_compression
+    t0 = time.monotonic()
+    lowered, compiled = _lower_and_compile(
+        cfg, cell, mesh, mb, remat, grad_compression
+    )
+    record["compile_s"] = round(time.monotonic() - t0, 2)
+
+    mem = compiled.memory_analysis()
+    record["memory"] = {
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "peak_bytes": int(
+            mem.argument_size_in_bytes
+            + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes
+        ),
+    }
+    # analytic per-device HBM model (CPU buffer assignment over-approximates
+    # temp liveness — see EXPERIMENTS.md §Dry-run methodology)
+    from ..dist.memmodel import analytic_memory
+
+    record["hbm_model"] = analytic_memory(
+        cfg, mesh, cell.kind, cell.batch, cell.seq,
+        microbatches=record.get("microbatches", 1),
+    )
+    raw = _cost_fields(compiled, n_dev)
+    record["cost_raw"] = {
+        "flops_per_device": raw["flops"],
+        "bytes_per_device": raw["bytes"],
+        "collective_bytes_per_device": raw["collective_bytes"],
+    }
+    record["collectives"] = raw["collectives"]
+
+    if extrapolate:
+        # XLA cost analysis counts a lax.scan body ONCE regardless of trip
+        # count, so scanned-layer models under-report.  Compile small
+        # models with layer scans UNROLLED (countable) and fit:
+        #   prefill/decode: cost(L) = a + b·L            (2 compiles)
+        #   train:          cost(mb, L) = u0 + u1·L + mb·(g0 + g1·L)
+        #                   from (mb, L) in {1,2}×{l1,l2} (4 cheap compiles
+        #                   at one-microbatch batch size) — far cheaper
+        #                   than unrolling the real-mb step.
+        from ..models.flags import unroll_layers
+
+        l1, l2 = _reduced_layer_pair(cfg)
+        keys = ("flops", "bytes", "collective_bytes", "transcendentals")
+        extr = {}
+        with unroll_layers(True):
+            if cell.kind == "train" and mb > 1:
+                b_mb = cell.batch // mb
+                grid = {}
+                for mb_f in (1, 2):
+                    for lf in (l1, l2):
+                        c = dataclasses.replace(cfg, n_layers=lf)
+                        cell_f = dataclasses.replace(
+                            cell, batch=b_mb * mb_f
+                        )
+                        grid[(mb_f, lf)] = _cost_fields(
+                            _lower_and_compile(
+                                c, cell_f, mesh, mb_f, remat,
+                                grad_compression,
+                            )[1],
+                            n_dev,
+                        )
+                for key in keys:
+                    g_l1 = grid[(2, l1)][key] - grid[(1, l1)][key]
+                    g_l2 = grid[(2, l2)][key] - grid[(1, l2)][key]
+                    u_l1 = grid[(1, l1)][key] - g_l1
+                    u_l2 = grid[(1, l2)][key] - g_l2
+                    g = g_l1 + (g_l2 - g_l1) / (l2 - l1) * (cfg.n_layers - l1)
+                    u = u_l1 + (u_l2 - u_l1) / (l2 - l1) * (cfg.n_layers - l1)
+                    extr[key] = max(u + mb * g, 0.0)
+            else:
+                c1 = _cost_fields(
+                    _lower_and_compile(
+                        dataclasses.replace(cfg, n_layers=l1), cell, mesh, mb, remat
+                    )[1], n_dev,
+                )
+                c2 = _cost_fields(
+                    _lower_and_compile(
+                        dataclasses.replace(cfg, n_layers=l2), cell, mesh, mb, remat
+                    )[1], n_dev,
+                )
+                for key in keys:
+                    slope = (c2[key] - c1[key]) / (l2 - l1)
+                    extr[key] = max(c1[key] + slope * (cfg.n_layers - l1), 0.0)
+        record["cost"] = {
+            "flops_per_device": extr["flops"],
+            "bytes_per_device": extr["bytes"],
+            "collective_bytes_per_device": extr["collective_bytes"],
+            "transcendentals": extr["transcendentals"],
+            "extrapolated_from_layers": [l1, l2],
+        }
+    else:
+        record["cost"] = dict(record["cost_raw"])
+
+    # analytic MODEL_FLOPS (the spec's 6·N·D / 2·N·D) per device
+    n_active = cfg.active_param_count()
+    if cell.kind == "train":
+        tokens = cell.batch * cell.seq
+        model_flops = 6 * n_active * tokens
+    elif cell.kind == "prefill":
+        model_flops = 2 * n_active * cell.batch * cell.seq
+    else:
+        model_flops = 2 * n_active * cell.batch  # one token per request
+    record["model_flops_per_device"] = model_flops / n_dev
+    return record
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    args = ap.parse_args(argv)
+
+    if args.all:
+        cells = [(a, s) for a in list_archs() for s in SHAPES]
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required (or --all)")
+        cells = [(args.arch, args.shape)]
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch} × {shape} × {'2x16x16' if mp else '16x16'}"
+            try:
+                rec = lower_cell(
+                    arch, shape, multi_pod=mp,
+                    microbatches=args.microbatches,
+                    remat=not args.no_remat,
+                    # §Roofline is single-pod only; multi-pod cells prove
+                    # the pod axis shards (compile + memory), no cost fit
+                    extrapolate=not mp,
+                )
+            except Exception as e:  # noqa: BLE001 - recorded as cell failure
+                rec = {
+                    "arch": arch, "shape": shape,
+                    "mesh": "multi" if mp else "single",
+                    "status": "failed", "error": f"{type(e).__name__}: {e}",
+                }
+                failures += 1
+            if rec["status"] == "ok":
+                m = rec["memory"]
+                hm = rec["hbm_model"]
+                print(
+                    f"[ok] {tag}: hbm-model {hm['total']/2**30:.2f} GiB/device "
+                    f"({'fits' if hm['fits_v5e_16gb'] else 'OVER'} 16G), "
+                    f"xla-upper {m['peak_bytes']/2**30:.2f} GiB, "
+                    f"{rec['cost']['flops_per_device']/1e12:.2f} TF/device, "
+                    f"link {rec['cost']['collective_bytes_per_device']/2**30:.3f} GiB/device "
+                    f"(compile {rec['compile_s']}s)",
+                    flush=True,
+                )
+            elif rec["status"] == "skipped":
+                print(f"[skip] {tag}: {rec['reason']}", flush=True)
+            else:
+                print(f"[FAIL] {tag}: {rec['error']}", flush=True)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,34 @@
+"""Production TPU mesh (DESIGN.md §6).
+
+Single pod: 16×16 = 256 chips, axes ("data", "model").
+Multi-pod:  2×16×16 = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis carries the cross-pod (DCN/optical) data parallelism; "model"
+stays inside a pod where ICI is fastest.
+
+Functions, not module constants: importing this module must never touch
+JAX device state (the dry-run pins the device count before first init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "POD_SHAPE"]
+
+POD_SHAPE = (16, 16)  # v5e pod slice: 256 chips
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Mesh over however many devices this process actually has (tests,
+    examples, CPU smoke) — same axis names as production."""
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))

@@ -1,0 +1,162 @@
+"""pRUN — pPython's SPMD launcher (paper §III.A).
+
+``pRUN(target, np_)`` starts ``np_`` Python instances of the same program
+(single program, multiple data), wiring each to the file-based PythonMPI
+through environment variables::
+
+    PPYTHON_NP        world size
+    PPYTHON_PID       this instance's rank
+    PPYTHON_COMM_DIR  shared directory for message files
+
+``target`` is either a script path (launched as ``python script.py``) or a
+``"module:function"`` string (launched through ``prun_worker``).  Rank
+results come back over MPI: each worker sends its return value to rank 0's
+result mailbox, mirroring how gridMatlab collected leader output.
+
+Fault handling beyond the paper: a per-rank supervisor notices dead
+processes (nonzero exit) and, when ``restarts > 0``, relaunches the rank
+with the same environment — restarted ranks are expected to resume from
+the last checkpoint (see ``repro.train.checkpoint``).
+"""
+
+from __future__ import annotations
+
+import importlib
+import os
+import pickle
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+from typing import Any, Sequence
+
+__all__ = ["pRUN", "prun_worker"]
+
+
+def _worker_cmd(target: str, extra_args: Sequence[str]) -> list[str]:
+    if ":" in target and not os.path.exists(target):
+        return [
+            sys.executable,
+            "-m",
+            "repro.launch.prun",
+            target,
+            *extra_args,
+        ]
+    return [sys.executable, target, *extra_args]
+
+
+def pRUN(
+    target: str,
+    np_: int,
+    *,
+    args: Sequence[str] = (),
+    comm_dir: str | os.PathLike | None = None,
+    timeout: float = 600.0,
+    restarts: int = 0,
+    env: dict[str, str] | None = None,
+    collect_results: bool = True,
+) -> list[Any]:
+    """Launch ``np_`` SPMD instances of ``target``; return per-rank results.
+
+    Results are only collected for ``module:function`` targets (scripts run
+    for side effects, matching the paper's usage).
+    """
+    own_dir = comm_dir is None
+    comm_dir = Path(
+        tempfile.mkdtemp(prefix="ppython_") if own_dir else comm_dir
+    )
+    comm_dir.mkdir(parents=True, exist_ok=True)
+    is_func = ":" in target and not os.path.exists(target)
+
+    base_env = dict(os.environ)
+    base_env.update(env or {})
+    base_env["PPYTHON_NP"] = str(np_)
+    base_env["PPYTHON_COMM_DIR"] = str(comm_dir)
+    # keep each instance single-threaded (paper §III.F.4: multithreaded BLAS
+    # oversubscribes the node when several ranks share it)
+    base_env.setdefault("OMP_NUM_THREADS", "1")
+    base_env.setdefault("OPENBLAS_NUM_THREADS", "1")
+    base_env.setdefault("MKL_NUM_THREADS", "1")
+
+    cmd = _worker_cmd(target, list(args))
+    procs: dict[int, subprocess.Popen] = {}
+    budget: dict[int, int] = {pid: restarts for pid in range(np_)}
+
+    def launch(pid: int) -> None:
+        e = dict(base_env)
+        e["PPYTHON_PID"] = str(pid)
+        procs[pid] = subprocess.Popen(cmd, env=e)
+
+    for pid in range(np_):
+        launch(pid)
+
+    deadline = time.monotonic() + timeout
+    try:
+        while True:
+            alive = False
+            for pid, p in list(procs.items()):
+                rc = p.poll()
+                if rc is None:
+                    alive = True
+                elif rc != 0:
+                    if budget[pid] > 0:
+                        budget[pid] -= 1
+                        launch(pid)  # rank restart (resumes from checkpoint)
+                        alive = True
+                    else:
+                        for q in procs.values():
+                            if q.poll() is None:
+                                q.kill()
+                        raise RuntimeError(
+                            f"pRUN rank {pid} exited with code {rc} "
+                            f"(no restart budget left)"
+                        )
+            if not alive:
+                break
+            if time.monotonic() > deadline:
+                for q in procs.values():
+                    if q.poll() is None:
+                        q.kill()
+                raise TimeoutError(f"pRUN: ranks still running after {timeout}s")
+            time.sleep(0.02)
+
+        if is_func and collect_results:
+            results = []
+            for pid in range(np_):
+                rf = comm_dir / f"result_{pid}.pkl"
+                if rf.exists():
+                    with open(rf, "rb") as f:
+                        results.append(pickle.load(f))
+                else:
+                    results.append(None)
+            return results
+        return []
+    finally:
+        if own_dir:
+            import shutil
+
+            shutil.rmtree(comm_dir, ignore_errors=True)
+
+
+def prun_worker(target: str, argv: Sequence[str]) -> None:
+    """Entry point inside each SPMD instance for ``module:function`` targets."""
+    from ..comm import get_context, init
+
+    mod_name, fn_name = target.split(":", 1)
+    ctx = init()
+    try:
+        mod = importlib.import_module(mod_name)
+        fn = getattr(mod, fn_name)
+        result = fn(*argv) if argv else fn()
+        out = Path(os.environ["PPYTHON_COMM_DIR"]) / f"result_{ctx.pid}.pkl"
+        tmp = out.with_suffix(".tmp")
+        with open(tmp, "wb") as f:
+            pickle.dump(result, f, protocol=5)
+        os.rename(tmp, out)
+    finally:
+        ctx.finalize()
+
+
+if __name__ == "__main__":
+    prun_worker(sys.argv[1], sys.argv[2:])

@@ -1,0 +1,109 @@
+"""Scheduler interface (paper §I/§III: gridMatlab heritage, Slurm first).
+
+pPython submits SPMD jobs through the cluster scheduler instead of
+launching local processes.  ``slurm_script`` renders an ``sbatch`` file in
+which every Slurm task runs one pPython instance wired to the shared
+comm directory; ``submit`` shells out to ``sbatch`` when present.
+
+A TPU-pod variant is included: on TPU the "scheduler" launches one process
+per host and initializes ``jax.distributed`` so all hosts join one JAX
+runtime; the PGAS layer then addresses chips through the mesh instead of
+message files (see DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import subprocess
+from pathlib import Path
+
+__all__ = ["slurm_script", "submit", "tpu_pod_script"]
+
+
+def slurm_script(
+    target: str,
+    np_: int,
+    comm_dir: str,
+    *,
+    job_name: str = "ppython",
+    partition: str | None = None,
+    time_limit: str = "01:00:00",
+    cpus_per_task: int = 1,
+    nodes: int | None = None,
+    python: str = "python",
+) -> str:
+    """Render an sbatch script running ``np_`` pPython instances."""
+    lines = [
+        "#!/bin/bash",
+        f"#SBATCH --job-name={job_name}",
+        f"#SBATCH --ntasks={np_}",
+        f"#SBATCH --cpus-per-task={cpus_per_task}",
+        f"#SBATCH --time={time_limit}",
+    ]
+    if partition:
+        lines.append(f"#SBATCH --partition={partition}")
+    if nodes:
+        lines.append(f"#SBATCH --nodes={nodes}")
+    lines += [
+        "",
+        "# one-sided file messaging needs a shared filesystem (paper §III.D)",
+        f"export PPYTHON_NP={np_}",
+        f"export PPYTHON_COMM_DIR={comm_dir}",
+        "export OMP_NUM_THREADS=1  # avoid BLAS oversubscription (paper §III.F.4)",
+        "export OPENBLAS_NUM_THREADS=1",
+        "export MKL_NUM_THREADS=1",
+        "",
+        'srun bash -c "PPYTHON_PID=\\$SLURM_PROCID '
+        + (
+            f"{python} -m repro.launch.prun {target}"
+            if ":" in target and not os.path.exists(target)
+            else f"{python} {target}"
+        )
+        + '"',
+        "",
+    ]
+    return "\n".join(lines)
+
+
+def submit(script_text: str, workdir: str | os.PathLike = ".") -> str:
+    """Write the sbatch file; submit it if ``sbatch`` exists on this host.
+
+    Returns the job id (or the script path when no scheduler is present,
+    so laptop development degrades gracefully)."""
+    workdir = Path(workdir)
+    workdir.mkdir(parents=True, exist_ok=True)
+    script = workdir / "ppython_job.sbatch"
+    script.write_text(script_text)
+    script.chmod(0o755)
+    if shutil.which("sbatch") is None:
+        return str(script)
+    out = subprocess.run(
+        ["sbatch", str(script)], capture_output=True, text=True, check=True
+    )
+    return out.stdout.strip().split()[-1]
+
+
+def tpu_pod_script(
+    target: str,
+    *,
+    num_hosts: int,
+    coordinator: str = "$(hostname -i):8476",
+    python: str = "python",
+) -> str:
+    """Per-host launch script for a TPU pod slice.
+
+    Each host initializes ``jax.distributed`` (process_id = host index) and
+    runs the same SPMD program; the production mesh in
+    ``repro.launch.mesh`` then spans every chip of the slice."""
+    return "\n".join(
+        [
+            "#!/bin/bash",
+            "# Run on every host of the slice (e.g. via gcloud compute tpus ssh --worker=all)",
+            f"export REPRO_COORD={coordinator}",
+            f"export REPRO_NUM_HOSTS={num_hosts}",
+            'export REPRO_HOST_ID="${TPU_WORKER_ID:-0}"',
+            f"{python} -m repro.launch.distributed_init {target}",
+            "",
+        ]
+    )

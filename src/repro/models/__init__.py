@@ -1,0 +1,26 @@
+"""Model zoo: the 10 assigned LM-family architectures in pure JAX.
+
+One forward/train/decode implementation per *family* (dense GQA
+transformer, MoE, Mamba2 hybrid, RWKV-6), parameterized by ``ModelConfig``;
+VLM/audio archs reuse the dense backbone with stubbed modality frontends
+(``inputs_embeds`` path).  All sharding is expressed through the paper's
+Dmap construct via ``repro.core.jax_bridge`` (see ``repro.dist``).
+"""
+
+from .config import ModelConfig
+from .model import (
+    init_params,
+    loss_fn,
+    model_forward,
+    init_decode_state,
+    decode_step,
+)
+
+__all__ = [
+    "ModelConfig",
+    "init_params",
+    "model_forward",
+    "loss_fn",
+    "init_decode_state",
+    "decode_step",
+]

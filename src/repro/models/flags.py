@@ -1,0 +1,30 @@
+"""Model-level tracing flags (thread-local).
+
+``unroll_layers``: make every layer scan fully unrolled during tracing.
+Used ONLY by the dry-run's cost-extrapolation compiles — XLA's cost
+analysis counts a ``lax.scan`` body once regardless of trip count, so the
+reduced-depth models it fits per-layer slopes from must be unrolled to be
+countable.  Production paths keep scans rolled (compile time).
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+_state = threading.local()
+
+
+@contextmanager
+def unroll_layers(on: bool = True):
+    prev = getattr(_state, "unroll", False)
+    _state.unroll = on
+    try:
+        yield
+    finally:
+        _state.unroll = prev
+
+
+def scan_unroll() -> bool | int:
+    """Value for lax.scan's ``unroll=`` in layer loops."""
+    return True if getattr(_state, "unroll", False) else 1

@@ -1,0 +1,183 @@
+"""Mamba2 (SSD) blocks — the Zamba2 hybrid backbone.
+
+Chunked state-space-duality formulation (Dao & Gu 2024): within a chunk
+the output is a masked quadratic form (MXU-friendly einsums); across
+chunks a tiny recurrence over per-chunk states.  The chunk length is the
+TPU blocking knob (VMEM working set ~ chunk² · heads), mirroring how the
+paper's PGAS blocks choose their grain.
+
+Decode keeps O(1) state: (conv tail, SSM state (H, P, N)) per layer —
+which is what makes the ``long_500k`` cell feasible for hybrid/SSM archs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import rms_norm
+
+CONV_K = 4  # causal depthwise conv width
+
+
+def mamba2_param_shapes(cfg: ModelConfig) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    return {
+        "in_proj": (d, 2 * di + 2 * n + h),  # z, x, B, C, dt
+        "conv_w": (CONV_K, di),
+        "A_log": (h,),
+        "D_skip": (h,),
+        "dt_bias": (h,),
+        "gate_norm": (di,),
+        "out_proj": (di, d),
+    }
+
+
+def _split(cfg: ModelConfig, zxbcdt):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xs = zxbcdt[..., di : 2 * di]
+    bm = zxbcdt[..., 2 * di : 2 * di + n]
+    cm = zxbcdt[..., 2 * di + n : 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n :]
+    return z, xs, bm, cm, dt
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv along seq: x (B,S,Di), w (K,Di)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return jax.nn.silu(out)
+
+
+def ssd_chunked(xh, dt, a_log, bm, cm, chunk: int):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P) inputs; dt: (B,S,H) softplus'd steps; a_log: (H,) decay
+    logs; bm/cm: (B,S,N) input/output projections.  Returns (B,S,H,P).
+    """
+    b, s, h, p = xh.shape
+    n = bm.shape[-1]
+    q = chunk
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+    c = s // q
+
+    A = -jnp.exp(a_log.astype(jnp.float32))  # (H,) < 0
+    dtf = dt.astype(jnp.float32)
+    dA = dtf * A  # (B,S,H)
+    xd = (xh * dt[..., None]).astype(xh.dtype)  # dt-scaled inputs
+
+    # chunked views
+    dA_c = dA.reshape(b, c, q, h)
+    x_c = xd.reshape(b, c, q, h, p)
+    b_c = bm.reshape(b, c, q, n)
+    c_c = cm.reshape(b, c, q, n)
+
+    dA_cs = jnp.cumsum(dA_c, axis=2)  # (B,C,Q,H) within-chunk cumulative
+
+    # --- intra-chunk (quadratic, MXU) -------------------------------------
+    seg = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]  # (B,C,Q,Q,H) i,j
+    mask = jnp.tril(jnp.ones((q, q), dtype=bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    S = jnp.einsum("bcin,bcjn->bcij", c_c.astype(jnp.float32), b_c.astype(jnp.float32))
+    M = (S[..., None] * L).astype(xh.dtype)  # (B,C,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, x_c)
+
+    # --- per-chunk states ---------------------------------------------------
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # (B,C,Q,H)
+    states = jnp.einsum(
+        "bcjn,bcjh,bcjhp->bchnp",
+        b_c.astype(jnp.float32),
+        decay_to_end,
+        x_c.astype(jnp.float32),
+    )  # (B,C,H,N,P)
+
+    # --- inter-chunk recurrence ----------------------------------------------
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])  # (B,C,H)
+
+    def step(prev, inp):
+        st, dec = inp  # (B,H,N,P), (B,H)
+        new = prev * dec[:, :, None, None] + st
+        return new, prev  # emit state *entering* the chunk
+
+    init = jnp.zeros((b, h, n, p), dtype=jnp.float32)
+    _, prev_states = jax.lax.scan(
+        step,
+        init,
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)),
+    )
+    prev_states = prev_states.swapaxes(0, 1)  # (B,C,H,N,P)
+
+    decay_from_start = jnp.exp(dA_cs)  # (B,C,Q,H)
+    y_inter = jnp.einsum(
+        "bcin,bchnp,bcih->bcihp",
+        c_c.astype(jnp.float32),
+        prev_states,
+        decay_from_start,
+    ).astype(xh.dtype)
+
+    return (y_intra + y_inter).reshape(b, s, h, p)
+
+
+def mamba2_block(cfg: ModelConfig, p, x):
+    """Full Mamba2 mixer: in_proj -> conv -> SSD -> gated norm -> out_proj."""
+    b, s, _ = x.shape
+    h = cfg.ssm_heads
+    ph = cfg.d_inner // h
+    z, xs, bm, cm, dt = _split(cfg, x @ p["in_proj"])
+    xs = _causal_conv(xs, p["conv_w"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    y = ssd_chunked(
+        xs.reshape(b, s, h, ph), dt, p["A_log"], bm, cm, cfg.ssm_chunk
+    )
+    y = y + xs.reshape(b, s, h, ph) * p["D_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, s, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# Decode (O(1) state per layer)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_decode_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    h = cfg.ssm_heads
+    ph = cfg.d_inner // h
+    return {
+        "conv": jnp.zeros((batch, CONV_K - 1, cfg.d_inner), dtype=dtype),
+        "ssm": jnp.zeros((batch, h, ph, cfg.ssm_state), dtype=jnp.float32),
+    }
+
+
+def mamba2_decode_step(cfg: ModelConfig, p, state, x):
+    """x: (B, 1, D) -> (out (B,1,D), new_state)."""
+    b = x.shape[0]
+    h = cfg.ssm_heads
+    ph = cfg.d_inner // h
+    z, xs, bm, cm, dt = _split(cfg, x @ p["in_proj"])  # (B,1,·)
+    # conv over the rolling tail
+    tail = jnp.concatenate([state["conv"], xs], axis=1)  # (B,K,Di)
+    xs1 = jax.nn.silu(
+        jnp.einsum("bkd,kd->bd", tail, p["conv_w"])
+    )[:, None, :]  # (B,1,Di)
+    new_conv = tail[:, 1:, :]
+
+    dtf = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dec = jnp.exp(dtf * A)  # (B,H)
+    xh = xs1.reshape(b, h, ph).astype(jnp.float32)
+    bmf = bm[:, 0].astype(jnp.float32)  # (B,N)
+    cmf = cm[:, 0].astype(jnp.float32)
+    new_ssm = state["ssm"] * dec[:, :, None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", xh, bmf, dtf
+    )
+    y = jnp.einsum("bhpn,bn->bhp", new_ssm, cmf)
+    y = y + xh * p["D_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], {"conv": new_conv, "ssm": new_ssm}

@@ -1,0 +1,111 @@
+"""Mixture-of-Experts FFN (DeepSeekMoE / Qwen3-MoE style).
+
+Sort-free capacity dispatch: tokens scatter into per-expert buffers
+(E, C, D) via cumsum slots, experts run as one batched einsum, outputs
+gather back weighted by the router gate.  The expert dimension E is
+block-mapped over the ``model`` mesh axis (expert parallelism as a Dmap,
+DESIGN.md §5) so the scatter/gather lowers to the token all-to-all that
+MoE systems schedule explicitly — here XLA derives it from the sharding,
+PITFALLS-style.
+
+Supports DeepSeek's shared experts (always-on FFN alongside the routed
+ones) and an optional load-balance auxiliary loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _act, ffn_param_shapes
+
+CAPACITY_FACTOR = 1.25
+
+
+def moe_param_shapes(cfg: ModelConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    shapes = {
+        "router": (d, e),
+        "experts": {
+            "w_gate": (e, d, f),
+            "w_up": (e, d, f),
+            "w_down": (e, f, d),
+        },
+    }
+    if cfg.n_shared_experts:
+        shapes["shared"] = ffn_param_shapes(
+            cfg, cfg.n_shared_experts * cfg.d_ff_expert
+        )
+    return shapes
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.moe_top_k / cfg.n_experts * CAPACITY_FACTOR)
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU-friendly shapes
+
+
+def moe_ffn(cfg: ModelConfig, p, x):
+    """x: (B, S, D) -> (B, S, D), plus the load-balance aux loss."""
+    b, s, d = x.shape
+    t = b * s
+    k, e = cfg.moe_top_k, cfg.n_experts
+    tokens = x.reshape(t, d)
+
+    gate_logits = tokens.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    gates = jax.nn.softmax(gate_logits, axis=-1)  # (T, E)
+    top_w, top_i = jax.lax.top_k(gates, k)  # (T, K)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # slot assignment via stable sort (O(TK log TK) and O(TK) memory — a
+    # (T*K, E) one-hot cumsum would be hundreds of MB per layer at 4k
+    # train shapes): position within each expert's run = own index minus
+    # the run's start
+    flat_e = top_i.reshape(-1)  # (T*K,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    run_start = jnp.searchsorted(sorted_e, jnp.arange(e, dtype=flat_e.dtype))
+    pos_sorted = jnp.arange(t * k, dtype=jnp.int32) - run_start[sorted_e]
+    pos_in_e = jnp.zeros((t * k,), dtype=jnp.int32).at[order].set(pos_sorted)
+    cap = capacity(cfg, t)
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, pos_in_e, cap)  # overflow -> scratch row
+
+    # scatter tokens into (E, C+1, D) expert buffers; the expert dim is
+    # block-mapped over "model" (EP) and capacity over the data axes, so
+    # the scatter lowers to the MoE token all-to-all
+    from ..dist.hints import constrain
+
+    xrep = jnp.repeat(tokens, k, axis=0)  # (T*K, D)
+    xrep = constrain(xrep, "dp", None)  # keep token copies on their owners
+    buf = jnp.zeros((e, cap + 1, d), dtype=x.dtype)
+    buf = buf.at[flat_e, slot].add(xrep * keep[:, None].astype(x.dtype))
+    buf = constrain(buf, "model", "dp", None)
+
+    # batched expert FFN (GLU family activations share the gate path)
+    ew = p["experts"]
+    if cfg.activation.endswith("_glu"):
+        h = _act(cfg.activation, jnp.einsum("ecd,edf->ecf", buf, ew["w_gate"]))
+        h = h * jnp.einsum("ecd,edf->ecf", buf, ew["w_up"])
+    else:
+        h = _act(cfg.activation, jnp.einsum("ecd,edf->ecf", buf, ew["w_up"]))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, ew["w_down"])  # (E, C+1, D)
+    out_buf = constrain(out_buf, "model", "dp", None)
+
+    # gather back with gate weights
+    y = out_buf[flat_e, slot]  # (T*K, D)
+    y = constrain(y, "dp", None)  # return path: tokens back to owners
+    y = y * (top_w.reshape(-1, 1) * keep[:, None]).astype(y.dtype)
+    y = y.reshape(t, k, d).sum(axis=1)
+
+    if cfg.n_shared_experts:
+        from .layers import ffn
+
+        y = y + ffn(cfg, p["shared"], tokens)
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * P_e
+    me = jnp.mean(gates, axis=0)  # router prob mass per expert
+    counts = jnp.zeros((e,), jnp.float32).at[flat_e].add(1.0)  # routed count
+    ce = jax.lax.stop_gradient(counts) / (t * k)
+    aux = e * jnp.sum(me * ce)
+    return y.reshape(b, s, d), aux

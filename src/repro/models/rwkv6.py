@@ -1,0 +1,195 @@
+"""RWKV-6 "Finch": attention-free time-mix with data-dependent decay.
+
+Per head of size K: state S ∈ R^{K×K} evolves as
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+    y_t = (S_{t-1} + diag(u) k_t v_tᵀ)ᵀ r_t
+with per-channel decay w_t produced from the token via a low-rank MLP
+(the Finch contribution: *data-dependent* decay).  Token-shift mixes each
+projection's input with the previous token.
+
+Training uses a chunk-parallel form (cumulative log-decay within a chunk,
+state carried across chunks) so the MXU sees batched matmuls rather than a
+length-S scan; decode is the O(1) recurrence.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import rms_norm
+
+LORA_R = 64  # decay LoRA rank
+
+
+def rwkv6_param_shapes(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "tm": {  # time mix
+            "mu_r": (d,), "mu_k": (d,), "mu_v": (d,), "mu_w": (d,), "mu_g": (d,),
+            "wr": (d, d), "wk": (d, d), "wv": (d, d), "wg": (d, d), "wo": (d, d),
+            "w0": (d,),                      # decay base
+            "w_lora_a": (d, LORA_R),         # data-dependent decay LoRA
+            "w_lora_b": (LORA_R, d),
+            "u": (d,),                       # per-channel bonus
+            "ln_x": (d,),                    # post-attention group norm
+        },
+        "cm": {  # channel mix
+            "mu_k": (d,), "mu_r": (d,),
+            "wk": (d, cfg.d_ff), "wv": (cfg.d_ff, d), "wr": (d, d),
+        },
+    }
+
+
+def _token_shift(x, x_prev_last=None):
+    """shifted[t] = x[t-1]; first position takes x_prev_last (or zeros)."""
+    first = (
+        jnp.zeros_like(x[:, :1]) if x_prev_last is None else x_prev_last[:, None, :]
+    )
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _mix(x, shifted, mu):
+    return x + (shifted - x) * mu
+
+
+def _decay(p, xw):
+    """Data-dependent per-channel decay in (0,1): exp(-exp(w))."""
+    lora = jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    return jnp.exp(-jnp.exp((p["w0"] + lora).astype(jnp.float32)))
+
+
+def wkv6_chunked(r, k, v, w, u, chunk: int):
+    """Chunk-parallel WKV: r/k/v/w: (B,S,H,K); u: (H,K). Returns (B,S,H,K).
+
+    Within a chunk, pairwise decay products come from cumulative log-decay
+    differences; across chunks the state recurrence runs at chunk rate.
+    """
+    b, s, h, kk = r.shape
+    q = chunk
+    assert s % q == 0
+    c = s // q
+    rf, kf, vf = (a.astype(jnp.float32).reshape(b, c, q, h, kk) for a in (r, k, v))
+    wf = w.astype(jnp.float32).reshape(b, c, q, h, kk)
+    logw = jnp.log(jnp.clip(wf, 1e-12, 1.0))
+    cs = jnp.cumsum(logw, axis=2)  # (B,C,Q,H,K) log decay from chunk start..t
+
+    # A[i,j] = r_i · (prod_{j<t<=i-? } w) k_j  for j < i (strictly past), plus
+    # the diagonal bonus u.  decay(j->i) for j<i is exp(cs[i-1]... careful:
+    # S entering step i contains k_j v_j^T decayed by w_{j+1..i-1}; y uses
+    # S_{t-1}, so decay from j to i is prod_{t=j+1}^{i-1} w_t = exp(cs[i-1]-cs[j]).
+    # Using cs at full precision: exp(cs[i] - cs[j] - logw[i]).
+    ri = rf * jnp.exp(cs - logw)         # r_i * exp(cs[i-1])
+    kj = kf * jnp.exp(-cs)               # k_j * exp(-cs[j])
+    A = jnp.einsum("bcihk,bcjhk->bchij", ri, kj)  # (B,C,H,Q,Q)
+    mask = jnp.tril(jnp.ones((q, q), dtype=bool), k=-1)  # strictly causal
+    A = jnp.where(mask[None, None, None], A, 0.0)
+    diag = jnp.einsum("bcihk,hk,bcihk->bcih", rf, u.astype(jnp.float32), kf)
+    y = jnp.einsum("bchij,bcjhk->bcihk", A, vf)
+    y = y + diag[..., None] * vf
+
+    # inter-chunk state recurrence: state (B,H,K,K) [key, value]
+    decay_to_end = jnp.exp(cs[:, :, -1:, :, :] - cs)  # w_{j+1..end}
+    chunk_states = jnp.einsum(
+        "bcjhk,bcjhv->bchkv", kf * decay_to_end, vf
+    )  # contribution of chunk c, decayed to its end
+    chunk_decay = jnp.exp(cs[:, :, -1])  # (B,C,H,K) total decay across chunk
+
+    def step(prev, inp):
+        st, dec = inp  # (B,H,K,V), (B,H,K)
+        return prev * dec[..., None] + st, prev
+
+    init = jnp.zeros((b, h, kk, kk), dtype=jnp.float32)
+    _, prev_states = jax.lax.scan(
+        step, init, (chunk_states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1))
+    )
+    prev_states = prev_states.swapaxes(0, 1)  # (B,C,H,K,V) state entering chunk
+
+    # r_i picks up the entering state decayed from chunk start to i-1
+    y_inter = jnp.einsum("bcihk,bchkv->bcihv", ri, prev_states)
+    return (y + y_inter).reshape(b, s, h, kk)
+
+
+def rwkv6_time_mix(cfg: ModelConfig, p, x, shift_last=None, state=None):
+    """Training path (full sequence). Returns output (B,S,D)."""
+    b, s, d = x.shape
+    h = d // cfg.rwkv_head_dim
+    kk = cfg.rwkv_head_dim
+    xs = _token_shift(x, shift_last)
+    xr, xk, xv, xw, xg = (
+        _mix(x, xs, p[f"mu_{n}"]) for n in ("r", "k", "v", "w", "g")
+    )
+    r = (xr @ p["wr"]).reshape(b, s, h, kk)
+    k = (xk @ p["wk"]).reshape(b, s, h, kk)
+    v = (xv @ p["wv"]).reshape(b, s, h, kk)
+    g = jax.nn.silu(xg @ p["wg"])
+    w = _decay(p, xw).reshape(b, s, h, kk)
+    u = p["u"].reshape(h, kk)
+    y = wkv6_chunked(r, k, v, w, u, min(cfg.ssm_chunk or 64, s))
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = rms_norm(y, p["ln_x"], cfg.norm_eps) * g
+    # fp32 mu_*/decay params promote intermediates; keep the residual
+    # stream in the input dtype
+    return (y @ p["wo"]).astype(x.dtype)
+
+
+def rwkv6_channel_mix(cfg: ModelConfig, p, x, shift_last=None):
+    xs = _token_shift(x, shift_last)
+    xk = _mix(x, xs, p["mu_k"])
+    xr = _mix(x, xs, p["mu_r"])
+    kact = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (kact @ p["wv"])
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode (O(1) state)
+# ---------------------------------------------------------------------------
+
+
+def rwkv6_decode_state(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    h = d // cfg.rwkv_head_dim
+    kk = cfg.rwkv_head_dim
+    return {
+        "tm_shift": jnp.zeros((batch, d), dtype=jnp.float32),
+        "cm_shift": jnp.zeros((batch, d), dtype=jnp.float32),
+        "wkv": jnp.zeros((batch, h, kk, kk), dtype=jnp.float32),
+    }
+
+
+def rwkv6_time_mix_step(cfg: ModelConfig, tm, state, x):
+    """One-token time-mix.  x: (B, D) *normed* input.  Returns
+    (out (B,D), new shift, new wkv state); residuals live in model.py so
+    the decode path matches the training layer structure exactly."""
+    b, d = x.shape
+    h = d // cfg.rwkv_head_dim
+    kk = cfg.rwkv_head_dim
+    xt = x.astype(jnp.float32)
+    xs = state["tm_shift"]
+    mixed = {n: xt + (xs - xt) * tm[f"mu_{n}"] for n in ("r", "k", "v", "w", "g")}
+    r = (mixed["r"] @ tm["wr"]).reshape(b, h, kk)
+    k = (mixed["k"] @ tm["wk"]).reshape(b, h, kk)
+    v = (mixed["v"] @ tm["wv"]).reshape(b, h, kk)
+    g = jax.nn.silu(mixed["g"] @ tm["wg"])
+    w = _decay(tm, mixed["w"]).reshape(b, h, kk)
+    u = tm["u"].reshape(h, kk)
+
+    s_prev = state["wkv"]  # (B,H,K,V)
+    y = jnp.einsum("bhk,bhkv->bhv", r, s_prev) + jnp.einsum(
+        "bhk,hk,bhk,bhv->bhv", r, u, k, v
+    )
+    s_new = s_prev * w[..., None] + jnp.einsum("bhk,bhv->bhkv", k, v)
+    y = rms_norm(y.reshape(b, d), tm["ln_x"], cfg.norm_eps) * g
+    return (y @ tm["wo"]).astype(x.dtype), xt, s_new
+
+
+def rwkv6_channel_mix_step(cfg: ModelConfig, cm, state_shift, x):
+    """One-token channel-mix.  x: (B, D) *normed* input."""
+    xt = x.astype(jnp.float32)
+    xk = xt + (state_shift - xt) * cm["mu_k"]
+    xr = xt + (state_shift - xt) * cm["mu_r"]
+    kact = jnp.square(jax.nn.relu(xk @ cm["wk"]))
+    out = jax.nn.sigmoid(xr @ cm["wr"]) * (kact @ cm["wv"])
+    return out.astype(x.dtype), xt

@@ -1,0 +1,5 @@
+"""Serving substrate: batched decode over KV caches / SSM states."""
+
+from .engine import make_prefill_step, make_serve_step, ServeEngine
+
+__all__ = ["make_prefill_step", "make_serve_step", "ServeEngine"]

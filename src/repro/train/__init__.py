@@ -1,0 +1,13 @@
+"""Training substrate: optimizer (AdamW + WSD), train step, checkpointing
+(with PITFALLS elastic resharding), synthetic data pipeline."""
+
+from .optimizer import adamw_init, adamw_update, lr_schedule
+from .train_step import make_train_step, TrainStepConfig
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "lr_schedule",
+    "make_train_step",
+    "TrainStepConfig",
+]

@@ -1,0 +1,275 @@
+"""Checkpointing: sharded save/restore with PITFALLS elastic resharding.
+
+Layout (one directory per step, atomically published by rename)::
+
+    ckpt/step-000042.tmp/...   -> ckpt/step-000042/
+        manifest.json          # per-leaf: global shape, dtype, segments
+        <leaf-path>__s<k>.npy  # one file per saved shard
+
+Each saved segment records its per-dim half-open index ranges.  On restore
+the *new* topology's wanted ranges are intersected with the saved segments
+using the FALLS algebra — the paper's redistribution algorithm applied at
+the storage layer — so a job saved on 512 ranks restarts on 256 (or 8, or
+40) without any resharding pass: every host reads exactly the bytes it
+owns under the new Dmap (DESIGN.md §4, §8).
+
+``CheckpointManager`` adds async writes (background thread), retention,
+and restart discovery for the fault-tolerant training loop.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any
+
+import numpy as np
+
+from ..core.pitfalls import FALLS, falls_intersect
+
+__all__ = ["CheckpointManager", "save_tree", "load_tree", "reshard_read"]
+
+
+def _flatten(tree: dict, prefix: str = "") -> list[tuple[str, Any]]:
+    out = []
+    for k in sorted(tree):
+        v = tree[k]
+        p = f"{prefix}.{k}" if prefix else str(k)
+        if isinstance(v, dict):
+            out.extend(_flatten(v, p))
+        else:
+            out.append((p, v))
+    return out
+
+
+def _unflatten(items: dict[str, Any]) -> dict:
+    root: dict = {}
+    for path, v in items.items():
+        parts = path.split(".")
+        d = root
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = v
+    return root
+
+
+def _leaf_segments(leaf) -> list[tuple[np.ndarray, list[list[int]]]]:
+    """(data, per-dim [start, stop]) for each locally-held shard."""
+    shards = getattr(leaf, "addressable_shards", None)
+    if shards is None:  # plain numpy / scalar
+        arr = np.asarray(leaf)
+        return [(arr, [[0, s] for s in arr.shape])]
+    out = []
+    seen = set()
+    for sh in shards:
+        idx = []
+        arr = np.asarray(sh.data)
+        for d, sl in enumerate(sh.index):
+            start = sl.start or 0
+            stop = sl.stop if sl.stop is not None else leaf.shape[d]
+            idx.append([int(start), int(stop)])
+        key = tuple(map(tuple, idx))
+        if key in seen:  # replicated leaf: save one copy
+            continue
+        seen.add(key)
+        out.append((arr, idx))
+    if not out:  # 0-d array
+        out = [(np.asarray(leaf), [])]
+    return out
+
+
+def save_tree(step_dir: Path, name: str, tree: dict) -> dict:
+    """Write every locally-held shard; returns this tree's manifest entry."""
+    entries = {}
+    for path, leaf in _flatten(tree):
+        arr_dtype = str(np.asarray(jnp_to_np(leaf)).dtype) if not hasattr(leaf, "dtype") else str(np.dtype(leaf.dtype))
+        segs = []
+        for i, (data, idx) in enumerate(_leaf_segments(leaf)):
+            fn = f"{name}__{path}__s{i}.npy"
+            np.save(step_dir / fn, data)
+            segs.append({"file": fn, "index": idx})
+        entries[path] = {
+            "shape": [int(s) for s in np.shape(leaf)],
+            "dtype": arr_dtype,
+            "segments": segs,
+        }
+    return entries
+
+
+def jnp_to_np(leaf):
+    return np.asarray(leaf)
+
+
+def reshard_read(
+    step_dir: Path, entry: dict, want: list[list[int]] | None = None
+) -> np.ndarray:
+    """Assemble the ``want`` region (default: all) of a saved leaf.
+
+    Per dimension, the wanted half-open range is a single-segment FALLS;
+    intersecting it with each saved segment's FALLS yields exactly the file
+    regions to read — the paper's redistribution math, disk edition.
+    """
+    shape = entry["shape"]
+    dtype = np.dtype(entry["dtype"].replace("bfloat16", "float32"))
+    bf16 = entry["dtype"] == "bfloat16"
+    if want is None:
+        want = [[0, s] for s in shape]
+    out_shape = [stop - start for start, stop in want]
+    out = np.zeros(out_shape, dtype=dtype if not bf16 else np.float32)
+    if not shape:  # scalar
+        data = np.load(step_dir / entry["segments"][0]["file"])
+        return data
+    for seg in entry["segments"]:
+        src_sl, dst_sl = [], []
+        ok = True
+        for d, ((ws, we), (ss, se)) in enumerate(zip(want, seg["index"])):
+            inter = falls_intersect(
+                FALLS(ws, we - 1, max(we - ws, 1), 1),
+                FALLS(ss, se - 1, max(se - ss, 1), 1),
+            )
+            if not inter:
+                ok = False
+                break
+            lo, hi = inter[0].l, inter[0].r + 1
+            src_sl.append(slice(lo - ss, hi - ss))
+            dst_sl.append(slice(lo - ws, hi - ws))
+        if not ok:
+            continue
+        data = np.load(step_dir / seg["file"])
+        if bf16:
+            data = data.astype(np.float32)
+        out[tuple(dst_sl)] = data[tuple(src_sl)]
+    return out
+
+
+def load_tree(
+    step_dir: Path,
+    name: str,
+    manifest: dict,
+    shardings: dict | None = None,
+) -> dict:
+    """Restore a tree.  With ``shardings`` (a matching tree of
+    NamedSharding), each leaf is assembled per-device from exactly the
+    saved bytes that intersect that device's shard (elastic restart)."""
+    import jax
+
+    flat_sh = dict(_flatten(shardings)) if shardings else {}
+    leaves = {}
+    for path, entry in manifest.items():
+        sh = flat_sh.get(path)
+        if sh is None:
+            arr = reshard_read(step_dir, entry)
+            if entry["dtype"] == "bfloat16":
+                import jax.numpy as jnp
+
+                arr = jnp.asarray(arr, dtype=jnp.bfloat16)
+            leaves[path] = arr
+        else:
+            import jax.numpy as jnp
+
+            dtype = jnp.bfloat16 if entry["dtype"] == "bfloat16" else entry["dtype"]
+            shape = tuple(entry["shape"])
+
+            def make(idx, entry=entry, dtype=dtype):
+                want = []
+                for d, sl in enumerate(idx):
+                    start = sl.start or 0
+                    stop = sl.stop if sl.stop is not None else entry["shape"][d]
+                    want.append([int(start), int(stop)])
+                arr = reshard_read(step_dir, entry, want)
+                return jnp.asarray(arr, dtype=dtype)
+
+            leaves[path] = jax.make_array_from_callback(shape, sh, make)
+    return _unflatten(leaves)
+
+
+class CheckpointManager:
+    """Atomic, optionally-async checkpointing with retention + discovery."""
+
+    def __init__(self, directory: str | os.PathLike, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    # -- save -------------------------------------------------------------------
+
+    def save(self, step: int, trees: dict[str, dict], blocking: bool = True,
+             extra_meta: dict | None = None) -> None:
+        """trees: {"params": ..., "opt_state": ...}."""
+        if not blocking:
+            self.wait()  # one in-flight async save at a time
+            # snapshot to host memory before returning control
+            host_trees = {
+                n: _unflatten({p: np.asarray(jnp_to_np(l)) for p, l in _flatten(t)})
+                for n, t in trees.items()
+            }
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_trees, extra_meta), daemon=True
+            )
+            self._thread.start()
+            return
+        self._write(step, trees, extra_meta)
+
+    def _write(self, step: int, trees, extra_meta) -> None:
+        tmp = self.dir / f"step-{step:08d}.tmp"
+        final = self.dir / f"step-{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {"step": step, "time": time.time(), "trees": {}}
+        if extra_meta:
+            manifest["meta"] = extra_meta
+        for name, tree in trees.items():
+            manifest["trees"][name] = save_tree(tmp, name, tree)
+        with open(tmp / "manifest.json", "w") as f:
+            json.dump(manifest, f)
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(self.list_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step-{s:08d}", ignore_errors=True)
+
+    # -- restore -------------------------------------------------------------------
+
+    def list_steps(self) -> list[int]:
+        return sorted(
+            int(p.name.split("-")[1])
+            for p in self.dir.glob("step-*")
+            if p.is_dir() and not p.name.endswith(".tmp")
+        )
+
+    def latest_step(self) -> int | None:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self, step: int | None = None, shardings: dict[str, dict] | None = None
+    ) -> tuple[int, dict[str, dict], dict]:
+        """Returns (step, trees, meta).  ``shardings`` maps tree name to a
+        sharding tree for elastic (PITFALLS) restoration."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        step_dir = self.dir / f"step-{step:08d}"
+        with open(step_dir / "manifest.json") as f:
+            manifest = json.load(f)
+        trees = {}
+        for name, entries in manifest["trees"].items():
+            sh = (shardings or {}).get(name)
+            trees[name] = load_tree(step_dir, name, entries, sh)
+        return step, trees, manifest.get("meta", {})

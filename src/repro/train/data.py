@@ -1,0 +1,80 @@
+"""Data pipeline: deterministic synthetic token streams, sharded per host.
+
+Real corpora are out of scope for a CPU container, but the pipeline is the
+real thing structurally: an infinite deterministic stream (seed, step) ->
+global batch, from which each host materializes *only its shard* — the
+same owner-computes discipline as the paper's `rand(..., map=m)`, which
+fills only local parts.  Swapping `synthetic_batch` for a tokenized corpus
+reader keeps every other layer unchanged.
+
+The generator is zipfian over the vocab with a periodic n-gram structure,
+so cross-entropy has learnable signal (examples/train_lm.py shows the loss
+dropping well below uniform).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+
+__all__ = ["synthetic_batch", "host_shard", "batch_iterator"]
+
+
+def _zipf_logits(vocab: int, alpha: float = 1.1) -> np.ndarray:
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    p = 1.0 / ranks**alpha
+    return np.log(p / p.sum())
+
+
+def synthetic_batch(
+    cfg: ModelConfig, batch: int, seq: int, step: int, seed: int = 0
+) -> dict:
+    """Global batch for ``step`` — identical on every host (deterministic)."""
+    rng = np.random.default_rng((seed, step))
+    vocab = cfg.vocab
+    logp = _zipf_logits(min(vocab, 4096))
+    base = rng.choice(len(logp), size=(batch, seq + 1), p=np.exp(logp))
+    # inject copyable structure: second half repeats the first half shifted
+    half = (seq + 1) // 2
+    base[:, half : 2 * half] = (base[:, :half] + 1) % min(vocab, 4096)
+    tokens = base[:, :seq].astype(np.int32)
+    labels = base[:, 1 : seq + 1].astype(np.int32)
+    out = {"labels": jnp.asarray(labels)}
+    if cfg.frontend:
+        # stub frontend: embed tokens with a fixed random table (frame/patch
+        # embeddings stand-in), labels stay token ids
+        table = np.random.default_rng(7).standard_normal(
+            (min(vocab, 4096), cfg.d_model)
+        ).astype(np.float32) * 0.02
+        out["inputs_embeds"] = jnp.asarray(table[tokens], dtype=jnp.bfloat16)
+    else:
+        out["tokens"] = jnp.asarray(tokens)
+    if cfg.pos_embedding == "mrope":
+        pos = np.broadcast_to(np.arange(seq, dtype=np.int32), (batch, seq))
+        out["positions"] = jnp.asarray(np.broadcast_to(pos, (3, batch, seq)))
+    return out
+
+
+def host_shard(batch: dict, host_id: int, n_hosts: int) -> dict:
+    """This host's slice of the global batch (batch-dim block Dmap)."""
+    def slc(x):
+        b = x.shape[0]
+        if x.ndim >= 2 and b == 3:  # mrope positions: (3, B, S)
+            sub = slc(x[0])
+            return jnp.broadcast_to(sub[None], (3, *sub.shape))
+        per = b // n_hosts
+        return x[host_id * per : (host_id + 1) * per]
+
+    return {k: slc(v) for k, v in batch.items()}
+
+
+def batch_iterator(cfg: ModelConfig, batch: int, seq: int, seed: int = 0,
+                   start_step: int = 0):
+    """Infinite deterministic stream; restart-safe (step index is state)."""
+    step = start_step
+    while True:
+        yield step, synthetic_batch(cfg, batch, seq, step, seed)
+        step += 1

@@ -1,0 +1,96 @@
+"""AdamW + learning-rate schedules (pure JAX, no external deps).
+
+Schedules: cosine (default) and MiniCPM's **WSD** (warmup-stable-decay,
+arXiv:2404.06395) — flat LR through the stable phase, then a short
+exponential decay tail; selected per-arch via ``ModelConfig.wsd_schedule``.
+
+Optimizer state is ``{m, v}`` in fp32 regardless of param dtype (bf16
+params receive fp32-accurate updates).  State shards exactly like the
+parameters (ZeRO-style: the same Dmap-derived sharding tree is applied to
+m/v), so optimizer memory scales down with the mesh.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"  # cosine | wsd
+    wsd_decay_frac: float = 0.1  # last 10% of steps decay (MiniCPM)
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    """Warmup + (cosine | WSD) in one jittable expression."""
+    stepf = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (stepf + 1.0) / max(cfg.warmup_steps, 1))
+    if cfg.schedule == "wsd":
+        decay_start = cfg.total_steps * (1.0 - cfg.wsd_decay_frac)
+        in_decay = jnp.maximum(0.0, stepf - decay_start)
+        span = max(cfg.total_steps * cfg.wsd_decay_frac, 1.0)
+        # exponential tail to ~1e-2 of peak over the decay span
+        decay = jnp.exp(jnp.log(1e-2) * in_decay / span)
+        return cfg.lr * warm * decay
+    # cosine to 10% of peak
+    frac = jnp.clip(stepf / max(cfg.total_steps, 1), 0.0, 1.0)
+    cos = 0.1 + 0.9 * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * cos
+
+
+def adamw_init(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, dtype=jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), dtype=jnp.int32),
+    }
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves)
+    )
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state):
+    """One AdamW step with global-norm clipping.  Returns (params, state,
+    aux) where aux carries the grad norm and the LR actually applied."""
+    step = state["step"] + 1
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12))
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bias1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bias2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * jnp.square(g)
+        mh = m / bias1
+        vh = v / bias2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m, v
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,318 @@
+"""Dmat distributed arrays: construction, ops, redistribution, support fns.
+
+Multi-rank behaviour runs under the in-process ThreadComm SPMD harness;
+`arange_field` arrays encode their own global index, so correctness of any
+redistribution is `local values == global ids at local positions`.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro.core as pp
+from repro.comm import run_spmd
+from repro.core import Dmap, Dmat
+
+
+def check_field(a: Dmat):
+    """Verify an arange_field Dmat holds exactly its global ids (owned part)."""
+    own = a.local_view_owned()
+    idx = [a.owned_indices(d) for d in range(a.ndim)]
+    if not all(len(i) for i in idx):
+        return
+    grids = np.meshgrid(*idx, indexing="ij")
+    lin = np.zeros_like(grids[0])
+    for d, g in enumerate(grids):
+        lin = lin * a.shape[d] + g
+    np.testing.assert_array_equal(own, lin.astype(a.dtype))
+
+
+class TestMapsOff:
+    def test_constructors_return_numpy(self):
+        assert isinstance(pp.zeros(4, 5), np.ndarray)
+        assert isinstance(pp.ones(4, 5, map=1), np.ndarray)  # map "off"
+        assert isinstance(pp.rand(4, map=None), np.ndarray)
+
+    def test_support_functions_serial(self):
+        a = np.arange(12.0).reshape(3, 4)
+        assert pp.local(a) is a
+        assert pp.agg(a) is a
+        assert pp.grid(a) == (1, 1)
+        assert pp.inmap(1)
+        pp.synch(a)  # no-op
+        assert pp.global_block_range(a, 0) == (0, 3)
+
+
+class TestSingleRank:
+    def test_construct_and_agg(self):
+        m = Dmap([1, 1], {}, [0])
+        a = pp.zeros(3, 4, map=m)
+        assert isinstance(a, Dmat)
+        assert a.local.shape == (3, 4)
+        np.testing.assert_array_equal(pp.agg(a), np.zeros((3, 4)))
+
+    def test_elementwise(self):
+        m = Dmap([1, 1], {}, [0])
+        a = pp.ones(2, 3, map=m)
+        b = pp.ones(2, 3, map=m)
+        c = a + 2.5 * b
+        np.testing.assert_allclose(c.local, 3.5)
+        d = -c / 7
+        np.testing.assert_allclose(d.local, -0.5)
+
+    def test_triad_matches_serial(self):
+        """STREAM triad with maps on == maps off (paper's key invariant)."""
+        m = Dmap([1, 1], {}, [0])
+        b_d, c_d = pp.rand(1, 8, map=m, seed=1), pp.rand(1, 8, map=m, seed=2)
+        a_d = b_d + 1.5 * c_d
+        b_s = pp.rand(1, 8, map=None, seed=1)
+        # maps-off rand uses pid 0 seed fold; identical draw
+        np.testing.assert_allclose(pp.agg(a_d), pp.local(b_d) + 1.5 * pp.local(c_d))
+
+    def test_setitem_scalar_and_array(self):
+        m = Dmap([1, 1], {}, [0])
+        a = pp.zeros(4, 4, map=m)
+        a[1:3, 1:3] = 7.0
+        assert a.local[1, 1] == 7.0 and a.local[0, 0] == 0.0
+        a[:, :] = np.arange(16.0).reshape(4, 4)
+        np.testing.assert_array_equal(pp.agg(a), np.arange(16.0).reshape(4, 4))
+
+
+def spmd_redistribute(shape, src_spec, dst_spec):
+    """SPMD body: build field under src map, redistribute to dst map."""
+    np_ = pp.Dmap([1], {}, [0]).np_  # noqa - placeholder to appease linters
+    import repro.comm as comm
+
+    world = comm.Np()
+    src_grid, src_dist, src_order = src_spec
+    dst_grid, dst_dist, dst_order = dst_spec
+    src_map = Dmap(src_grid, src_dist, range(world), order=src_order)
+    dst_map = Dmap(dst_grid, dst_dist, range(world), order=dst_order)
+    x = pp.arange_field(*shape, map=src_map)
+    z = pp.zeros(*shape, map=dst_map)
+    z[tuple(slice(None) for _ in shape)] = x
+    check_field(z)
+    return pp.agg(z, root=0)
+
+
+GRIDS_2D = [
+    ([4, 1], {}, "row"),
+    ([1, 4], {}, "row"),
+    ([2, 2], {}, "row"),
+    ([2, 2], {}, "col"),
+    ([4, 1], "c", "row"),
+    ([2, 2], [{"dist": "bc", "size": 3}, "b"], "row"),
+    ([1, 4], [{}, {"dist": "bc", "size": 2}], "row"),
+]
+
+
+class TestRedistributionSPMD:
+    @pytest.mark.parametrize("src", GRIDS_2D)
+    @pytest.mark.parametrize("dst", GRIDS_2D)
+    def test_2d_redistribute(self, src, dst):
+        shape = (11, 13)
+        results = run_spmd(spmd_redistribute, 4, args=(shape, src, dst))
+        want = np.arange(np.prod(shape), dtype=float).reshape(shape)
+        np.testing.assert_array_equal(results[0], want)
+
+    def test_corner_turn_fft_pattern(self):
+        """The paper's FFT benchmark skeleton: row map -> column map."""
+
+        def body():
+            import repro.comm as comm
+
+            world = comm.Np()
+            P, Q = 8, 12
+            xmap = Dmap([world, 1], {}, range(world))
+            zmap = Dmap([1, world], {}, range(world))
+            x = pp.dcomplex(
+                pp.rand(P, Q, map=xmap, seed=3), pp.rand(P, Q, map=xmap, seed=4)
+            )
+            x = pp.fft(x, axis=1)  # FFT rows (local axis)
+            z = pp.dcomplex(pp.zeros(P, Q, map=zmap), pp.zeros(P, Q, map=zmap))
+            z[:, :] = x  # corner turn
+            z = pp.fft(z, axis=0)  # FFT columns (now local)
+            return pp.agg(z, root=0)
+
+        got = run_spmd(body, 4)[0]
+
+        rng1 = np.random.default_rng((3, 0))
+        # serial oracle: reproduce per-rank seeded blocks then FFT2
+        def serial_field(seed, world=4, P=8, Q=12):
+            xmap = Dmap([world, 1], {}, range(world))
+            out = np.zeros((P, Q))
+            for r in range(world):
+                rows = xmap.local_indices((P, Q), 0, r)
+                rng = np.random.default_rng((seed, r))
+                out[rows] = rng.random((len(rows), Q))
+            return out
+
+        x_ser = serial_field(3) + 1j * serial_field(4)
+        want = np.fft.fft(np.fft.fft(x_ser, axis=1), axis=0)
+        np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+    def test_partial_region_assignment(self):
+        """Subsasgn into a window: dst[2:9, 1:9] = src (paper §II.C)."""
+
+        def body():
+            import repro.comm as comm
+
+            world = comm.Np()
+            src_map = Dmap([world, 1], {}, range(world))
+            dst_map = Dmap([1, world], {}, range(world))
+            x = pp.arange_field(7, 8, map=src_map)
+            z = pp.zeros(12, 10, map=dst_map)
+            z[2:9, 1:9] = x
+            return pp.agg(z, root=0)
+
+        got = run_spmd(body, 4)[0]
+        want = np.zeros((12, 10))
+        want[2:9, 1:9] = np.arange(56.0).reshape(7, 8)
+        np.testing.assert_array_equal(got, want)
+
+    def test_partial_proclists(self):
+        """Maps over disjoint processor subsets (streaming pattern, §III.B)."""
+
+        def body():
+            src_map = Dmap([2, 1], {}, [0, 1])
+            dst_map = Dmap([1, 2], {}, [2, 3])
+            x = pp.arange_field(6, 6, map=src_map)
+            z = pp.zeros(6, 6, map=dst_map)
+            z[:, :] = x
+            return pp.agg(z, root=2)
+
+        res = run_spmd(body, 4)
+        want = np.arange(36.0).reshape(6, 6)
+        np.testing.assert_array_equal(res[2], want)
+
+    def test_4d_redistribute(self):
+        """Paper: redistribution works in up to four dimensions."""
+
+        def body():
+            src_map = Dmap([2, 2, 1, 1], {}, range(4))
+            dst_map = Dmap([1, 1, 2, 2], ["b", "b", "c", "b"], range(4))
+            x = pp.arange_field(4, 5, 6, 3, map=src_map)
+            z = pp.zeros(4, 5, 6, 3, map=dst_map)
+            z[:, :, :, :] = x
+            check_field(z)
+            return pp.agg(z, root=0)
+
+        got = run_spmd(body, 4)[0]
+        want = np.arange(4 * 5 * 6 * 3, dtype=float).reshape(4, 5, 6, 3)
+        np.testing.assert_array_equal(got, want)
+
+
+class TestOverlap:
+    def test_halo_shapes_and_synch(self):
+        def body():
+            import repro.comm as comm
+
+            world = comm.Np()
+            m = Dmap([world, 1], {}, range(world), overlap=[1, 0])
+            a = pp.arange_field(8, 4, map=m)
+            # halo initially equals field values (arange_field fills halo too)
+            a.local[...] = a.local + 100 * (a.pid + 1)  # desync halo vs owner
+            pp.synch(a)
+            me = a.pid
+            own_rows = a.owned_indices(0)
+            if me < world - 1:
+                # halo row must equal successor's first owned row value
+                succ_first = a.local.shape  # noqa - readability
+                halo = a.local[len(own_rows) :]
+                assert halo.shape[0] == 1
+                return float(halo[0, 0])
+            return None
+
+        res = run_spmd(body, 4)
+        # rank r's halo = rank r+1's first owned value after its +100*(pid+1)
+        # rank r+1 first owned global row = 2*(r+1); value = (2*(r+1))*4 + 0
+        for r in range(3):
+            want = (2 * (r + 1)) * 4 + 100 * (r + 2)
+            assert res[r] == want
+
+    def test_overlap_cyclic_rejected(self):
+        with pytest.raises(ValueError):
+            Dmap([2, 1], "c", [0, 1], overlap=[1, 0])
+
+
+class TestSupportFunctions:
+    def test_global_block_ranges_spmd(self):
+        def body():
+            import repro.comm as comm
+
+            m = Dmap([comm.Np(), 1], {}, range(comm.Np()))
+            a = pp.zeros(10, 3, map=m)
+            return (
+                a.global_block_range(0),
+                [r[1:] for r in a.global_block_ranges(0)],
+            )
+
+        res = run_spmd(body, 4)
+        # enhanced block: 10 over 4 -> 3,3,2,2
+        assert [r[0] for r in res] == [(0, 3), (3, 6), (6, 8), (8, 10)]
+        assert res[0][1] == [(0, 3), (3, 6), (6, 8), (8, 10)]
+
+    def test_agg_all_and_put_local(self):
+        def body():
+            import repro.comm as comm
+
+            m = Dmap([comm.Np(), 1], {}, range(comm.Np()))
+            a = pp.zeros(8, 2, map=m)
+            pp.put_local(a, np.full(a.local.shape, float(comm.Pid())))
+            full = pp.agg_all(a)
+            return full
+
+        res = run_spmd(body, 4)
+        want = np.repeat(np.arange(4.0), 2)[:, None] * np.ones((1, 2))
+        for r in res:
+            np.testing.assert_array_equal(r, want)
+
+    def test_reductions(self):
+        def body():
+            import repro.comm as comm
+
+            m = Dmap([comm.Np(), 1], "c", range(comm.Np()))
+            a = pp.arange_field(9, 3, map=m)
+            return a.sum(), a.max(), a.min()
+
+        res = run_spmd(body, 3)
+        n = 27
+        for s, mx, mn in res:
+            assert s == n * (n - 1) / 2
+            assert mx == n - 1
+            assert mn == 0
+
+    def test_getitem_local_region(self):
+        m = Dmap([1, 1], {}, [0])
+        a = pp.arange_field(5, 5, map=m)
+        np.testing.assert_array_equal(a[1:3, 2:4], np.array([[7.0, 8], [12, 13]]))
+        assert a[2, 2] == 12.0
+
+
+@st.composite
+def dist_spec(draw):
+    kind = draw(st.sampled_from(["b", "c", "bc"]))
+    if kind == "bc":
+        return {"dist": "bc", "size": draw(st.integers(1, 4))}
+    return kind
+
+
+class TestRedistributeProperty:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        st.integers(5, 20),
+        st.integers(5, 20),
+        st.sampled_from([(2, 2), (4, 1), (1, 4)]),
+        st.sampled_from([(2, 2), (4, 1), (1, 4)]),
+        dist_spec(),
+        dist_spec(),
+    )
+    def test_any_to_any(self, n0, n1, g_src, g_dst, d_src, d_dst):
+        res = run_spmd(
+            spmd_redistribute,
+            4,
+            args=((n0, n1), (list(g_src), d_src, "row"), (list(g_dst), d_dst, "row")),
+        )
+        want = np.arange(n0 * n1, dtype=float).reshape(n0, n1)
+        np.testing.assert_array_equal(res[0], want)

@@ -1,0 +1,122 @@
+"""Dry-run analysis machinery: HLO collective parsing, roofline terms,
+memory model — unit-testable without the 512-device initialization."""
+
+import numpy as np
+import pytest
+
+from repro.launch.dryrun import (
+    _group_size,
+    _shape_bytes,
+    collective_link_bytes,
+)
+
+
+HLO_SAMPLE = """
+  %all-gather = f32[256,256]{1,0} all-gather(%p1), channel_id=1, replica_groups=[2,4]<=[4,2]T(1,0), dimensions={0}
+  %dot = f32[16,256]{1,0} dot(%p0, %all-gather)
+  %all-reduce = f32[64,64]{1,0} all-reduce(%dot.1), replica_groups=[4,2]<=[8], to_apply=%add
+  %rs = bf16[8,16]{1,0} reduce-scatter(%x), replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}
+  %a2a = bf16[32,8]{1,0} all-to-all(%y), replica_groups=[1,8]<=[8]
+  %cp = f32[10]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %ard = f32[64,64]{1,0} all-reduce-done(%all-reduce-start)
+"""
+
+
+class TestShapeBytes:
+    def test_simple(self):
+        assert _shape_bytes("f32[256,256]{1,0}") == 256 * 256 * 4
+        assert _shape_bytes("bf16[8,16]{1,0}") == 8 * 16 * 2
+        assert _shape_bytes("pred[]") == 1
+
+    def test_tuple(self):
+        assert (
+            _shape_bytes("(f32[4,4]{1,0}, bf16[2]{0})") == 4 * 4 * 4 + 2 * 2
+        )
+
+
+class TestGroupSize:
+    def test_iota_format(self):
+        assert _group_size("replica_groups=[2,4]<=[4,2]T(1,0)", 8) == 4
+        assert _group_size("replica_groups=[4,2]<=[8]", 8) == 2
+
+    def test_brace_format(self):
+        assert _group_size("replica_groups={{0,1,2,3},{4,5,6,7}}", 8) == 4
+
+    def test_default(self):
+        assert _group_size("no groups here", 16) == 16
+
+
+class TestCollectiveLinkBytes:
+    def test_sample_accounting(self):
+        out = collective_link_bytes(HLO_SAMPLE, 8)
+        b = out["bytes"]
+        # all-gather: result*(N-1)/N with N=4
+        assert b["all-gather"] == pytest.approx(256 * 256 * 4 * 3 / 4)
+        # all-reduce: 2*size*(N-1)/N with N=2 ; -done line must NOT count
+        assert b["all-reduce"] == pytest.approx(2 * 64 * 64 * 4 * 1 / 2)
+        assert out["count"]["all-reduce"] == 1
+        # reduce-scatter: result*(N-1), N=4
+        assert b["reduce-scatter"] == pytest.approx(8 * 16 * 2 * 3)
+        # all-to-all: size*(N-1)/N, N=8
+        assert b["all-to-all"] == pytest.approx(32 * 8 * 2 * 7 / 8)
+        assert b["collective-permute"] == 40
+        assert b["total"] == pytest.approx(
+            sum(v for k, v in b.items() if k != "total")
+        )
+
+    def test_start_counted_done_not(self):
+        text = """
+  %ag = f32[16]{0} all-gather-start(%x), replica_groups=[1,4]<=[4]
+  %agd = f32[16]{0} all-gather-done(%ag)
+"""
+        out = collective_link_bytes(text, 4)
+        assert out["count"].get("all-gather") == 1
+
+
+class TestRooflineAnalysis:
+    def test_analyze_record(self):
+        from benchmarks.roofline import analyze_record
+
+        rec = {
+            "status": "ok",
+            "arch": "x", "shape": "train_4k", "mesh": "single",
+            "kind": "train",
+            "cost": {
+                "flops_per_device": 197e12,      # exactly 1s of compute
+                "bytes_per_device": 819e9 * 2,   # 2s of HBM
+                "collective_bytes_per_device": 50e9 * 4,  # 4s of ICI
+            },
+            "model_flops_per_device": 98.5e12,   # useful = 0.5
+            "hbm_model": {"total": 8 * 2**30, "fits_v5e_16gb": True},
+            "memory": {"peak_bytes": 12 * 2**30},
+        }
+        row = analyze_record(rec)
+        assert row["dominant"] == "collective"
+        assert row["t_compute_s"] == pytest.approx(1.0)
+        assert row["t_memory_s"] == pytest.approx(2.0)
+        assert row["t_collective_s"] == pytest.approx(4.0)
+        assert row["useful_flops_ratio"] == pytest.approx(0.5)
+        # 98.5 TFLOP of useful work / 4s bound / 197 TF/s peak = 0.125
+        assert row["roofline_fraction"] == pytest.approx(0.125)
+
+    def test_skip_records_pass_through(self):
+        from benchmarks.roofline import analyze_record
+
+        assert analyze_record({"status": "failed"}) is None
+
+
+class TestMemModel:
+    def test_param_bytes_match_param_count(self):
+        """Summed sharded param bytes ≈ param_count × 2 (bf16) within the
+        few-fp32-specials tolerance, for a 1-device mesh."""
+        import jax
+        from jax.sharding import Mesh
+
+        from repro.configs import get_config
+        from repro.dist.memmodel import param_bytes_per_device
+
+        cfg = get_config("gemma-2b").reduced()
+        mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+        got = param_bytes_per_device(cfg, mesh)
+        want = cfg.param_count() * 2
+        assert abs(got - want) / want < 0.05

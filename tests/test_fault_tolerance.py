@@ -1,0 +1,93 @@
+"""Fault tolerance: rank restart, straggler detection, elastic restore."""
+
+import os
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.comm import FileMPI, StragglerTimeout
+from repro.launch import pRUN
+
+
+def crash_once_worker() -> str:
+    """Crashes on its first attempt (per rank); succeeds when relaunched.
+
+    Uses a marker file in the comm dir to remember the first attempt —
+    the same mechanism a real job uses (the checkpoint) to resume.
+    """
+    from repro.comm import Pid
+
+    comm_dir = Path(os.environ["PPYTHON_COMM_DIR"])
+    marker = comm_dir / f"attempted_{Pid()}"
+    if Pid() == 1 and not marker.exists():
+        marker.touch()
+        raise SystemExit(17)  # simulated node failure
+    return f"rank {Pid()} ok"
+
+
+class TestRankRestart:
+    @pytest.mark.slow
+    def test_prun_restarts_failed_rank(self, tmp_path):
+        res = pRUN(
+            "tests.test_fault_tolerance:crash_once_worker",
+            2,
+            comm_dir=tmp_path,
+            restarts=1,
+            timeout=300,
+        )
+        assert res == ["rank 0 ok", "rank 1 ok"]
+
+    @pytest.mark.slow
+    def test_prun_fails_without_restart_budget(self, tmp_path):
+        with pytest.raises(RuntimeError, match="exited with code 17"):
+            pRUN(
+                "tests.test_fault_tolerance:crash_once_worker",
+                2,
+                comm_dir=tmp_path,
+                restarts=0,
+                timeout=300,
+            )
+
+
+class TestStragglerDetection:
+    def test_timeout_names_dead_ranks(self, tmp_path):
+        ctx = FileMPI(np_=3, pid=0, comm_dir=tmp_path)
+        # rank 2 heartbeats; rank 1 never appears
+        other = FileMPI(np_=3, pid=2, comm_dir=tmp_path)
+        try:
+            with pytest.raises(StragglerTimeout) as exc:
+                ctx.recv(1, "never-coming", timeout=0.3)
+            assert "stale-heartbeat ranks: [1]" in str(exc.value)
+        finally:
+            ctx.finalize()
+            other.finalize()
+
+
+class TestElasticTopologyChange:
+    def test_checkpoint_roundtrip_across_np(self, tmp_path):
+        """Save a sharded tree as if from 4 ranks; restore as 6 and as 2."""
+        from repro.core.pitfalls import block_falls
+        from repro.train.checkpoint import reshard_read
+
+        rows = 31
+        full = np.random.default_rng(0).standard_normal((rows, 3)).astype(np.float32)
+        segs = []
+        for r in range(4):
+            f = block_falls(rows, 4, r)[0]
+            fn = f"t__w__s{r}.npy"
+            np.save(tmp_path / fn, full[f.l : f.r + 1])
+            segs.append({"file": fn, "index": [[f.l, f.r + 1], [0, 3]]})
+        entry = {"shape": [rows, 3], "dtype": "float32", "segments": segs}
+        for new_np in (6, 2, 1, 9):
+            got_parts = []
+            for r in range(new_np):
+                fs = block_falls(rows, new_np, r)
+                if not fs:
+                    continue
+                f = fs[0]
+                got_parts.append(
+                    reshard_read(tmp_path, entry, [[f.l, f.r + 1], [0, 3]])
+                )
+            np.testing.assert_array_equal(np.concatenate(got_parts), full)

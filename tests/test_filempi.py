@@ -1,0 +1,103 @@
+"""File-based PythonMPI + pRUN: the paper's transport, on real processes."""
+
+import os
+import pickle
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.comm import FileMPI, StragglerTimeout
+from repro.launch import pRUN
+
+
+class TestFileMPIUnit:
+    """Single-process unit tests: self-addressed mailboxes on disk."""
+
+    def test_send_recv_self(self, tmp_path):
+        ctx = FileMPI(np_=2, pid=0, comm_dir=tmp_path, heartbeat=False)
+        ctx.send(0, "t", np.arange(5))
+        assert ctx.probe(0, "t")
+        got = ctx.recv(0, "t")
+        np.testing.assert_array_equal(got, np.arange(5))
+        assert not ctx.probe(0, "t")
+
+    def test_fifo_per_tag(self, tmp_path):
+        ctx = FileMPI(np_=1, pid=0, comm_dir=tmp_path, heartbeat=False)
+        for i in range(5):
+            ctx.send(0, "seq", i)
+        assert [ctx.recv(0, "seq") for _ in range(5)] == list(range(5))
+
+    def test_one_sided_inspectable(self, tmp_path):
+        """Sends post without a receiver and sit on disk, inspectable —
+        the paper's debugging affordance (§III.D)."""
+        ctx = FileMPI(np_=2, pid=0, comm_dir=tmp_path, heartbeat=False)
+        ctx.send(1, "dbg", {"x": 42})
+        bufs = list(Path(tmp_path).glob("m_s0_d1_*.buf"))
+        assert len(bufs) == 1
+        with open(bufs[0], "rb") as f:
+            assert pickle.load(f) == {"x": 42}
+
+    def test_recv_timeout_raises_straggler(self, tmp_path):
+        ctx = FileMPI(np_=2, pid=0, comm_dir=tmp_path, heartbeat=False)
+        t0 = time.monotonic()
+        with pytest.raises(StragglerTimeout):
+            ctx.recv(1, "never", timeout=0.2)
+        assert time.monotonic() - t0 < 5
+
+    def test_arbitrary_tags(self, tmp_path):
+        ctx = FileMPI(np_=1, pid=0, comm_dir=tmp_path, heartbeat=False)
+        tag = ("redist", 3, "dim0")
+        ctx.send(0, tag, "payload")
+        assert ctx.recv(0, tag) == "payload"
+
+    def test_heartbeat_and_dead_rank_detection(self, tmp_path):
+        a = FileMPI(np_=2, pid=0, comm_dir=tmp_path)
+        # rank 1 never starts -> immediately reported dead (missing file)
+        assert a.dead_ranks(max_age=0.5) == [1]
+        b = FileMPI(np_=2, pid=1, comm_dir=tmp_path)
+        assert a.dead_ranks(max_age=10.0) == []
+        a.finalize()
+        b.finalize()
+
+
+@pytest.mark.slow
+class TestPRunProcesses:
+    """Real multi-process SPMD through the shared filesystem."""
+
+    def test_pingpong(self):
+        res = pRUN("repro.launch._selftest:pingpong", 2, timeout=120)
+        want = (np.arange(1000.0).sum()) * 2
+        assert res[0] == want
+
+    def test_bcast_barrier(self):
+        res = pRUN("repro.launch._selftest:bcast_barrier", 3, timeout=120)
+        assert res == [7.0 * 64] * 3
+
+    def test_redistribute_across_processes(self):
+        res = pRUN("repro.launch._selftest:redistribute_field", 3, timeout=180)
+        want = np.arange(90.0).reshape(9, 10)
+        np.testing.assert_array_equal(np.array(res[0]), want)
+        assert res[1] is None and res[2] is None
+
+    def test_complex_round_trip(self):
+        res = pRUN("repro.launch._selftest:complex_messages", 2, timeout=120)
+        assert all(res)
+
+
+class TestSlurmInterface:
+    def test_script_render(self, tmp_path):
+        from repro.launch.slurm import slurm_script, submit
+
+        txt = slurm_script(
+            "repro.launch._selftest:pingpong", 64, "/shared/comm",
+            partition="xeon-p8", nodes=2,
+        )
+        assert "#SBATCH --ntasks=64" in txt
+        assert "PPYTHON_COMM_DIR=/shared/comm" in txt
+        assert "OMP_NUM_THREADS=1" in txt  # paper §III.F.4
+        assert "PPYTHON_PID=\\$SLURM_PROCID" in txt
+        # no sbatch on this host -> returns script path
+        out = submit(txt, tmp_path)
+        assert out.endswith(".sbatch") and os.path.exists(out)

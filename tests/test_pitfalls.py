@@ -1,0 +1,166 @@
+"""PITFALLS index algebra: unit + property tests against explicit indices."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.pitfalls import (
+    FALLS,
+    block_cyclic_falls,
+    block_falls,
+    cyclic_falls,
+    dist_falls,
+    falls_indices,
+    falls_intersect,
+    falls_list_indices,
+    falls_list_intersect,
+    falls_list_size,
+    intersect_ranks,
+)
+
+
+def explicit(f):
+    return set(falls_indices(f).tolist())
+
+
+class TestFALLS:
+    def test_indices_basic(self):
+        f = FALLS(2, 4, 10, 3)  # [2,4], [12,14], [22,24]
+        assert falls_indices(f).tolist() == [2, 3, 4, 12, 13, 14, 22, 23, 24]
+
+    def test_invalid(self):
+        with pytest.raises(ValueError):
+            FALLS(0, 5, 3, 2)  # overlapping segments
+        with pytest.raises(ValueError):
+            FALLS(5, 3, 10, 1)  # end < start
+
+    def test_intersect_disjoint(self):
+        a = FALLS(0, 1, 4, 5)
+        b = FALLS(2, 3, 4, 5)
+        assert falls_intersect(a, b) == []
+
+    def test_intersect_identical(self):
+        a = FALLS(0, 2, 5, 7)
+        got = falls_list_indices(falls_intersect(a, a))
+        np.testing.assert_array_equal(got, falls_indices(a))
+
+
+@st.composite
+def falls_strategy(draw):
+    seg = draw(st.integers(1, 8))
+    s = draw(st.integers(seg, 24))
+    l = draw(st.integers(0, 40))
+    n = draw(st.integers(1, 12))
+    return FALLS(l, l + seg - 1, s, n)
+
+
+class TestIntersectProperty:
+    @settings(max_examples=300, deadline=None)
+    @given(falls_strategy(), falls_strategy())
+    def test_matches_explicit(self, f1, f2):
+        got = falls_list_intersect([f1], [f2])
+        want = explicit(f1) & explicit(f2)
+        have = set(falls_list_indices(got).tolist())
+        assert have == want
+        # result FALLS must be mutually disjoint
+        total = sum(len(explicit(g)) for g in got)
+        assert total == len(have)
+
+    @settings(max_examples=150, deadline=None)
+    @given(falls_strategy(), falls_strategy())
+    def test_commutes(self, f1, f2):
+        a = set(falls_list_indices(falls_list_intersect([f1], [f2])).tolist())
+        b = set(falls_list_indices(falls_list_intersect([f2], [f1])).tolist())
+        assert a == b
+
+
+class TestDistributions:
+    def test_enhanced_block_16_over_5(self):
+        """Paper Fig. 5: 16 elements over 5 ranks -> 4,3,3,3,3 (no starved rank)."""
+        sizes = [falls_list_size(block_falls(16, 5, r)) for r in range(5)]
+        assert sizes == [4, 3, 3, 3, 3]
+        # naive ceil-blocking would have produced 4,4,4,4,0
+        all_idx = np.concatenate(
+            [falls_list_indices(block_falls(16, 5, r)) for r in range(5)]
+        )
+        np.testing.assert_array_equal(np.sort(all_idx), np.arange(16))
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.integers(1, 200), st.integers(1, 16))
+    def test_block_partition(self, n, p):
+        """Enhanced block is a partition with fair (floor/ceil) shares."""
+        chunks = [block_falls(n, p, r) for r in range(p)]
+        sizes = [falls_list_size(c) for c in chunks]
+        assert sum(sizes) == n
+        assert max(sizes) - min(sizes) <= 1
+        # contiguous and ordered
+        idx = np.concatenate(
+            [falls_list_indices(c) for c in chunks if c]
+        )
+        np.testing.assert_array_equal(idx, np.arange(n))
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.integers(1, 200), st.integers(1, 16))
+    def test_cyclic_partition(self, n, p):
+        owned = [set(falls_list_indices(cyclic_falls(n, p, r)).tolist()) for r in range(p)]
+        union = set().union(*owned)
+        assert union == set(range(n))
+        assert sum(len(o) for o in owned) == n
+        for r in range(p):
+            assert all(i % p == r for i in owned[r])
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.integers(1, 300), st.integers(1, 8), st.integers(1, 9))
+    def test_block_cyclic_partition(self, n, p, b):
+        owned = [
+            set(falls_list_indices(block_cyclic_falls(n, p, r, b)).tolist())
+            for r in range(p)
+        ]
+        assert set().union(*owned) == set(range(n))
+        assert sum(len(o) for o in owned) == n
+        for r in range(p):
+            assert all((i // b) % p == r for i in owned[r])
+
+    def test_block_cyclic_truncated_tail(self):
+        # n=10, p=2, b=4: rank0 blocks [0-3],[8-9](truncated); rank1 [4-7]
+        r0 = falls_list_indices(block_cyclic_falls(10, 2, 0, 4)).tolist()
+        r1 = falls_list_indices(block_cyclic_falls(10, 2, 1, 4)).tolist()
+        assert r0 == [0, 1, 2, 3, 8, 9]
+        assert r1 == [4, 5, 6, 7]
+
+
+DIST_SPECS = ["b", "c", {"dist": "bc", "size": 2}, {"dist": "bc", "size": 5}, {}]
+
+
+class TestRedistributionSchedule:
+    @settings(max_examples=150, deadline=None)
+    @given(
+        st.integers(1, 120),
+        st.integers(1, 6),
+        st.integers(1, 6),
+        st.sampled_from(DIST_SPECS),
+        st.sampled_from(DIST_SPECS),
+    )
+    def test_schedule_covers_everything(self, n, p_src, p_dst, d_src, d_dst):
+        """Every destination index is received exactly once, from the rank
+        PITFALLS says owns it at the source."""
+        recv_count = np.zeros(n, dtype=int)
+        for dr in range(p_dst):
+            want = set(
+                falls_list_indices(dist_falls(n, p_dst, dr, d_dst)).tolist()
+            )
+            got = set()
+            for sr in range(p_src):
+                seg = intersect_ranks(n, p_src, d_src, p_dst, d_dst, sr, dr)
+                idx = falls_list_indices(seg).tolist()
+                src_owned = set(
+                    falls_list_indices(dist_falls(n, p_src, sr, d_src)).tolist()
+                )
+                assert set(idx) <= src_owned
+                assert not (set(idx) & got), "index received twice"
+                got |= set(idx)
+                for i in idx:
+                    recv_count[i] += 1
+            assert got == want
+        np.testing.assert_array_equal(recv_count, np.ones(n, dtype=int))

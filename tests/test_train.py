@@ -1,0 +1,186 @@
+"""Training substrate: optimizer/schedules, train step, data, checkpointing
+(including PITFALLS elastic resharding across topologies)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update, lr_schedule
+from repro.train.train_step import TrainStepConfig, init_opt_state, make_train_step
+from repro.train.data import batch_iterator, host_shard, synthetic_batch
+from repro.train.checkpoint import CheckpointManager, reshard_read, save_tree
+
+
+class TestSchedules:
+    def test_warmup_then_peak_cosine(self):
+        cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+        assert float(lr_schedule(cfg, jnp.int32(0))) < 1e-3 * 0.2
+        peak = float(lr_schedule(cfg, jnp.int32(10)))
+        assert peak > 8e-4
+        assert float(lr_schedule(cfg, jnp.int32(100))) < peak * 0.2
+
+    def test_wsd_flat_then_decay(self):
+        """MiniCPM WSD: stable (flat) phase then sharp exponential tail."""
+        cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=1000,
+                          schedule="wsd", wsd_decay_frac=0.1)
+        mid1 = float(lr_schedule(cfg, jnp.int32(300)))
+        mid2 = float(lr_schedule(cfg, jnp.int32(800)))
+        assert abs(mid1 - mid2) / mid1 < 1e-5  # stable phase is flat
+        tail = float(lr_schedule(cfg, jnp.int32(999)))
+        assert tail < mid2 * 0.05  # decayed to ~1% of peak
+
+
+class TestAdamW:
+    def test_descends_quadratic(self):
+        params = {"w": jnp.asarray([3.0, -2.0])}
+        state = adamw_init(params)
+        cfg = AdamWConfig(lr=0.1, warmup_steps=1, total_steps=100,
+                          weight_decay=0.0, grad_clip=1e9)
+        for _ in range(150):
+            grads = {"w": 2 * params["w"]}
+            params, state, aux = adamw_update(cfg, params, grads, state)
+        assert float(jnp.abs(params["w"]).max()) < 0.15
+        assert np.isfinite(float(aux["grad_norm"]))
+
+    def test_grad_clip(self):
+        params = {"w": jnp.ones(4)}
+        state = adamw_init(params)
+        cfg = AdamWConfig(lr=1e-2, grad_clip=1.0, warmup_steps=1)
+        _, _, aux = adamw_update(cfg, params, {"w": jnp.full(4, 1e6)}, state)
+        assert float(aux["grad_norm"]) > 1e5  # reported pre-clip
+
+
+class TestTrainStep:
+    @pytest.mark.parametrize("arch", ["gemma-2b", "deepseek-moe-16b"])
+    def test_loss_decreases(self, arch):
+        cfg = get_config(arch).reduced()
+        params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+        opt = AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=50)
+        step_fn = jax.jit(make_train_step(cfg, opt, TrainStepConfig(remat=False)))
+        opt_state = init_opt_state(cfg, params)
+        batch = synthetic_batch(cfg, batch=4, seq=16, step=0)
+        first = None
+        for i in range(8):
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            if first is None:
+                first = float(metrics["loss"])
+        assert float(metrics["loss"]) < first  # memorizes the fixed batch
+
+    def test_microbatch_equivalence(self):
+        """grad-accum over 2 microbatches ~= full-batch step."""
+        cfg = get_config("qwen2-7b").reduced()
+        params = init_params(cfg, jax.random.PRNGKey(1), dtype=jnp.float32)
+        opt = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+        batch = synthetic_batch(cfg, batch=4, seq=8, step=3)
+        s1 = jax.jit(make_train_step(cfg, opt, TrainStepConfig(remat=False)))
+        s2 = jax.jit(
+            make_train_step(cfg, opt, TrainStepConfig(remat=False, microbatches=2))
+        )
+        p1, _, m1 = s1(params, init_opt_state(cfg, params), batch)
+        p2, _, m2 = s2(params, init_opt_state(cfg, params), batch)
+        np.testing.assert_allclose(
+            float(m1["loss"]), float(m2["loss"]), rtol=1e-5
+        )
+        d = jax.tree.map(
+            lambda a, b: float(jnp.max(jnp.abs(a - b))), p1, p2
+        )
+        assert max(jax.tree.leaves(d)) < 1e-4
+
+    def test_grad_compression_modes(self):
+        cfg = get_config("qwen2-7b").reduced()
+        params = init_params(cfg, jax.random.PRNGKey(2), dtype=jnp.float32)
+        opt = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+        batch = synthetic_batch(cfg, batch=2, seq=8, step=0)
+        for mode in ("bf16", "int8_ef"):
+            ts = TrainStepConfig(remat=False, grad_compression=mode)
+            fn = jax.jit(make_train_step(cfg, opt, ts))
+            p, s, m = fn(params, init_opt_state(cfg, params, ts), batch)
+            assert np.isfinite(float(m["loss"]))
+            if mode == "int8_ef":
+                assert "ef_residual" in s  # error feedback carried
+
+
+class TestData:
+    def test_deterministic_and_restartable(self):
+        cfg = get_config("qwen2-7b").reduced()
+        a = synthetic_batch(cfg, 4, 16, step=5)
+        b = synthetic_batch(cfg, 4, 16, step=5)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        it = batch_iterator(cfg, 4, 16, start_step=5)
+        step, c = next(it)
+        assert step == 5
+        np.testing.assert_array_equal(a["tokens"], c["tokens"])
+
+    def test_host_shard_partition(self):
+        cfg = get_config("qwen2-7b").reduced()
+        g = synthetic_batch(cfg, 8, 16, step=0)
+        parts = [host_shard(g, h, 4) for h in range(4)]
+        stacked = np.concatenate([p["tokens"] for p in parts], axis=0)
+        np.testing.assert_array_equal(stacked, g["tokens"])
+
+
+class TestCheckpoint:
+    def _tree(self):
+        return {
+            "params": {
+                "embed": np.arange(48.0, dtype=np.float32).reshape(8, 6),
+                "layers": {"w": np.arange(24.0, dtype=np.float32).reshape(4, 6)},
+            },
+            "opt_state": {"step": np.int32(7)},
+        }
+
+    def test_save_restore_roundtrip(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, keep=2)
+        trees = self._tree()
+        mgr.save(7, trees)
+        step, got, _ = mgr.restore()
+        assert step == 7
+        np.testing.assert_array_equal(
+            got["params"]["embed"], trees["params"]["embed"]
+        )
+        assert int(got["opt_state"]["step"]) == 7
+
+    def test_atomic_publish_and_retention(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, keep=2)
+        for s in (1, 2, 3):
+            mgr.save(s, self._tree())
+        assert mgr.list_steps() == [2, 3]
+        assert not list(tmp_path.glob("*.tmp"))
+
+    def test_async_save(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        mgr.save(9, self._tree(), blocking=False)
+        mgr.wait()
+        assert mgr.latest_step() == 9
+
+    def test_elastic_reshard_read(self, tmp_path):
+        """Save segmented as 3 ranks, read back wanted windows of 5 ranks —
+        the PITFALLS restore path (paper's algorithm at the storage layer)."""
+        full = np.arange(17 * 4, dtype=np.float32).reshape(17, 4)
+        step_dir = tmp_path / "step-00000001"
+        step_dir.mkdir()
+        # simulate 3 saver ranks with enhanced-block rows: 6,6,5
+        from repro.core.pitfalls import block_falls
+
+        segs = []
+        for r in range(3):
+            f = block_falls(17, 3, r)[0]
+            lo, hi = f.l, f.r + 1
+            fn = f"params__w__s{r}.npy"
+            np.save(step_dir / fn, full[lo:hi])
+            segs.append({"file": fn, "index": [[lo, hi], [0, 4]]})
+        entry = {"shape": [17, 4], "dtype": "float32", "segments": segs}
+        # restore as 5 reader ranks
+        for r in range(5):
+            f = block_falls(17, 5, r)[0]
+            want = [[f.l, f.r + 1], [0, 4]]
+            got = reshard_read(step_dir, entry, want)
+            np.testing.assert_array_equal(got, full[f.l : f.r + 1])
+
+    def test_restore_missing_raises(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            CheckpointManager(tmp_path).restore()
