@@ -18,6 +18,7 @@ from .context import (
     LocalComm,
     Np,
     Pid,
+    Request,
     StragglerTimeout,
     get_context,
     init,
@@ -31,6 +32,7 @@ __all__ = [
     "FileMPI",
     "LocalComm",
     "ThreadComm",
+    "Request",
     "StragglerTimeout",
     "run_spmd",
     "get_context",

@@ -16,6 +16,9 @@ from typing import Any
 __all__ = [
     "CommContext",
     "LocalComm",
+    "Request",
+    "SendRequest",
+    "RecvRequest",
     "StragglerTimeout",
     "get_context",
     "set_context",
@@ -31,6 +34,64 @@ DEFAULT_RECV_TIMEOUT = float(os.environ.get("PPYTHON_RECV_TIMEOUT", "300"))
 
 class StragglerTimeout(RuntimeError):
     """A receive exceeded its deadline — the peer is straggling or dead."""
+
+
+class Request:
+    """Handle for a non-blocking point-to-point operation.
+
+    ``test()`` polls for completion without blocking; ``wait()`` blocks
+    until completion and returns the payload (``None`` for sends).  A
+    timed-out ``wait`` raises ``StragglerTimeout`` but leaves the request
+    valid — it can be waited on again.
+    """
+
+    def test(self) -> bool:
+        raise NotImplementedError
+
+    def wait(self, timeout: float | None = None) -> Any:
+        raise NotImplementedError
+
+
+class SendRequest(Request):
+    """Already-complete send: every transport here is one-sided, so posting
+    a message *is* its completion event."""
+
+    def test(self) -> bool:
+        return True
+
+    def wait(self, timeout: float | None = None) -> None:
+        return None
+
+
+class RecvRequest(Request):
+    """Generic polling receive built on ``probe``/``recv``.
+
+    Transports with per-(source, tag) sequence streams override ``irecv``
+    with a seq-reserving request so multiple receives can be outstanding
+    on one stream; this fallback supports one outstanding request per
+    stream, which is all the derived collectives need.
+    """
+
+    def __init__(self, ctx: "CommContext", source: int, tag: Any):
+        self._ctx = ctx
+        self._source = source
+        self._tag = tag
+        self._done = False
+        self._value: Any = None
+
+    def test(self) -> bool:
+        if self._done:
+            return True
+        if self._ctx.probe(self._source, self._tag):
+            self._value = self._ctx.recv(self._source, self._tag)
+            self._done = True
+        return self._done
+
+    def wait(self, timeout: float | None = None) -> Any:
+        if not self._done:
+            self._value = self._ctx.recv(self._source, self._tag, timeout=timeout)
+            self._done = True
+        return self._value
 
 
 class CommContext:
@@ -52,6 +113,55 @@ class CommContext:
 
     def finalize(self) -> None:  # MPI_Finalize
         pass
+
+    # -- non-blocking primitives ----------------------------------------------
+
+    def isend(self, dest: int, tag: Any, obj: Any) -> Request:
+        """Post a send and return its (already-complete) request handle.
+
+        All transports here are one-sided — a send never waits for its
+        matching receive — so the default posts eagerly.
+        """
+        self.send(dest, tag, obj)
+        return SendRequest()
+
+    def irecv(self, source: int, tag: Any) -> Request:
+        """Post a receive; complete it later with ``wait()``/``test()``."""
+        return RecvRequest(self, source, tag)
+
+    @staticmethod
+    def wait_all(requests, timeout: float | None = None) -> list:
+        """Complete a batch of requests in *arrival* order.
+
+        Returns payloads positionally (matching ``requests``).  Arrival-order
+        completion lets a receiver drain whichever peer finished first rather
+        than serializing on the slowest one.
+        """
+        deadline = time.monotonic() + (
+            DEFAULT_RECV_TIMEOUT if timeout is None else timeout
+        )
+        out: list[Any] = [None] * len(requests)
+        pending = {i: r for i, r in enumerate(requests)}
+        pause = 0.0
+        while pending:
+            progressed = False
+            for i in list(pending):
+                if pending[i].test():
+                    out[i] = pending.pop(i).wait(timeout=0.0)
+                    progressed = True
+            if not pending:
+                break
+            if progressed:
+                pause = 0.0
+                continue
+            if time.monotonic() > deadline:
+                raise StragglerTimeout(
+                    f"wait_all timed out with {len(pending)} of "
+                    f"{len(requests)} requests incomplete"
+                )
+            time.sleep(pause)
+            pause = min(pause + 0.0005, 0.02)
+        return out
 
     # -- derived collectives --------------------------------------------------
 

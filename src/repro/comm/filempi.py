@@ -24,20 +24,104 @@ so the launcher can restart them from the last checkpoint.
 from __future__ import annotations
 
 import hashlib
+import mmap
 import os
 import pickle
+import struct
 import threading
 import time
 from pathlib import Path
 from typing import Any
 
-from .context import DEFAULT_RECV_TIMEOUT, CommContext, StragglerTimeout
+from .context import DEFAULT_RECV_TIMEOUT, CommContext, Request, StragglerTimeout
 
 __all__ = ["FileMPI"]
 
 _POLL_MIN = 0.0005
 _POLL_MAX = 0.05
 HEARTBEAT_PERIOD = 5.0
+
+# Frame layout: the pickle bytes first, then the raw out-of-band buffers
+# (pickle protocol 5 ``buffer_callback``), then a fixed-size trailer of
+# per-buffer lengths + counts + a flag byte + magic.  Large array payloads
+# travel as their raw bytes — never re-encoded into the pickle stream —
+# and the whole message is one file and ONE fsync.  Putting the pickle
+# stream first keeps the paper's debugging affordance: a buffer-free
+# message sitting on disk can still be inspected with a naive
+# ``pickle.load`` (the loader stops at the STOP opcode and never sees the
+# trailer).  The flag byte marks chunk-header frames so ``probe`` can
+# classify a pending message from the 17-byte footer alone.
+_MAGIC = b"PPK5"
+_FOOT = struct.Struct("<QIB4s")  # head_len, nbuf, flags, magic — at file end
+_FLAG_CHUNKED = 1
+
+
+def _max_msg_bytes() -> int:
+    """Chunking threshold; 0 (default) disables chunking."""
+    return int(os.environ.get("PPYTHON_MAX_MSG_BYTES", "0") or 0)
+
+
+class _ChunkHeader:
+    """First message of a chunked payload: how many raw pieces follow."""
+
+    def __init__(self, nchunks: int, total: int):
+        self.nchunks = nchunks
+        self.total = total
+
+
+def _encode_frame(obj: Any, flags: int = 0) -> list:
+    """Serialize ``obj`` into a list of bytes-like pieces (no joining —
+    the caller streams them straight to the file)."""
+    buffers: list[pickle.PickleBuffer] = []
+    head = pickle.dumps(obj, protocol=5, buffer_callback=buffers.append)
+    raws = []
+    for b in buffers:
+        try:
+            raws.append(b.raw())
+        except BufferError:  # non-contiguous exporter: fall back to a copy
+            raws.append(bytes(b))
+    parts: list = [head]
+    parts.extend(raws)
+    parts.append(struct.pack(f"<{len(raws)}Q", *[len(r) for r in raws]))
+    parts.append(_FOOT.pack(len(head), len(raws), flags, _MAGIC))
+    return parts
+
+
+def _read_footer(path: Path) -> tuple[int, int, int] | None:
+    """(head_len, nbuf, flags) from a published frame's trailing bytes,
+    or None if the file vanished or is not a valid frame."""
+    try:
+        with open(path, "rb") as f:
+            f.seek(-_FOOT.size, os.SEEK_END)
+            head_len, nbuf, flags, magic = _FOOT.unpack(f.read(_FOOT.size))
+    except (FileNotFoundError, OSError, struct.error):
+        return None
+    if magic != _MAGIC:
+        return None
+    return head_len, nbuf, flags
+
+
+def _decode_frame(buf) -> Any:
+    """Rebuild an object from a frame held in a bytes-like ``buf``.
+
+    When ``buf`` is a copy-on-write mmap of the message file, array
+    payloads are reconstructed directly over the mapped pages — the raw
+    bytes are never copied into userspace a second time.
+    """
+    mv = memoryview(buf)
+    head_len, nbuf, _flags, magic = _FOOT.unpack_from(mv, len(mv) - _FOOT.size)
+    if magic != _MAGIC:
+        raise ValueError(f"bad message frame magic {magic!r}")
+    lens = struct.unpack_from(
+        f"<{nbuf}Q", mv, len(mv) - _FOOT.size - 8 * nbuf
+    )
+    head = mv[:head_len]
+    bufs = []
+    off = head_len
+    for n in lens:
+        bufs.append(mv[off : off + n])
+        off += n
+    return pickle.loads(head, buffers=bufs)
 
 
 def _tag_token(tag: Any) -> str:
@@ -46,6 +130,48 @@ def _tag_token(tag: Any) -> str:
     if len(s) <= 40 and all(c.isalnum() or c in "._-" for c in s):
         return s
     return hashlib.sha1(s.encode()).hexdigest()[:16]
+
+
+class _FileRecvRequest(Request):
+    """Receive handle bound to a reserved (source, tag, seq) slot."""
+
+    def __init__(self, ctx: "FileMPI", source: int, tag: Any, seq: int):
+        self._ctx = ctx
+        self._source = source
+        self._tag = tag
+        self._seq = seq
+        self._done = False
+        self._value: Any = None
+
+    def test(self) -> bool:
+        if not self._done:
+            got = self._ctx._try_claim(self._source, self._tag, self._seq)
+            if got is not _NOT_READY:
+                self._value = got
+                self._done = True
+        return self._done
+
+    def wait(self, timeout: float | None = None) -> Any:
+        if self._done:
+            return self._value
+        deadline = time.monotonic() + (
+            DEFAULT_RECV_TIMEOUT if timeout is None else timeout
+        )
+        pause = _POLL_MIN
+        while not self.test():
+            if time.monotonic() > deadline:
+                dead = self._ctx.dead_ranks()
+                raise StragglerTimeout(
+                    f"rank {self._ctx.pid} timed out receiving {self._tag!r} "
+                    f"(seq {self._seq}) from rank {self._source}; "
+                    f"stale-heartbeat ranks: {dead}"
+                )
+            time.sleep(pause)
+            pause = min(pause * 2, _POLL_MAX)
+        return self._value
+
+
+_NOT_READY = object()
 
 
 class FileMPI(CommContext):
@@ -58,6 +184,11 @@ class FileMPI(CommContext):
         self.dir = Path(comm_dir)
         self.dir.mkdir(parents=True, exist_ok=True)
         self._send_seq: dict[tuple[int, str], int] = {}
+        # next unreserved receive seq per (source, tag): blocking ``recv``
+        # commits it only after the message is claimed, so a
+        # StragglerTimeout leaves the stream position unchanged and a
+        # retry matches the same message; ``irecv`` reserves eagerly so
+        # several receives can be outstanding on one stream.
         self._recv_seq: dict[tuple[int, str], int] = {}
         self._hb_stop = threading.Event()
         self._hb_thread: threading.Thread | None = None
@@ -69,40 +200,116 @@ class FileMPI(CommContext):
     def _msg_path(self, src: int, dst: int, tag: Any, seq: int) -> Path:
         return self.dir / f"m_s{src}_d{dst}_q{seq}_{_tag_token(tag)}.buf"
 
+    def _publish(self, final: Path, parts: list) -> None:
+        """Write ``parts`` to a temp file, fsync once, atomically rename."""
+        tmp = final.with_suffix(f".tmp{os.getpid()}_{threading.get_ident()}")
+        with open(tmp, "wb") as f:
+            for p in parts:
+                f.write(p)
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, final)  # atomic publish
+
     def send(self, dest: int, tag: Any, obj: Any) -> None:
         if not (0 <= dest < self.np_):
             raise ValueError(f"dest {dest} out of range for np={self.np_}")
         key = (dest, _tag_token(tag))
         seq = self._send_seq.get(key, 0)
         self._send_seq[key] = seq + 1
-        final = self._msg_path(self.pid, dest, tag, seq)
-        tmp = final.with_suffix(f".tmp{os.getpid()}")
-        with open(tmp, "wb") as f:
-            pickle.dump(obj, f, protocol=5)
-            f.flush()
-            os.fsync(f.fileno())
-        os.rename(tmp, final)  # atomic publish
+        parts = _encode_frame(obj)
+        total = sum(len(p) for p in parts)
+        limit = _max_msg_bytes()
+        if limit and total > limit:
+            # Oversize payload: publish a chunk header on the main stream,
+            # then the raw frame bytes as <= limit pieces on a side stream
+            # derived from (tag, seq) — the main stream stays one seq per
+            # message, so outstanding irecvs never skew.
+            blob = b"".join(parts)
+            nchunks = -(-len(blob) // limit)
+            self._publish(
+                self._msg_path(self.pid, dest, tag, seq),
+                _encode_frame(_ChunkHeader(nchunks, len(blob)),
+                              flags=_FLAG_CHUNKED),
+            )
+            for i in range(nchunks):
+                self._publish(
+                    self._msg_path(self.pid, dest, ("__chunk", tag, seq), i),
+                    [blob[i * limit : (i + 1) * limit]],
+                )
+            return
+        self._publish(self._msg_path(self.pid, dest, tag, seq), parts)
+
+    @staticmethod
+    def _map_file(path: Path):
+        """Copy-on-write mmap of a published message file: array payloads
+        alias the mapped pages (zero-copy read, still writable), and once
+        the file is unlinked its pages live until the arrays referencing
+        them are garbage collected."""
+        with open(path, "rb") as f:
+            size = os.fstat(f.fileno()).st_size
+            return mmap.mmap(f.fileno(), size, access=mmap.ACCESS_COPY)
+
+    def _try_claim(self, source: int, tag: Any, seq: int) -> Any:
+        """One non-blocking, all-or-nothing claim attempt.
+
+        Returns ``_NOT_READY`` unless the message — including every chunk
+        piece of an oversize payload — is fully present; nothing is
+        unlinked until the object is decoded, so a timeout (or a sender
+        dying mid-chunk) leaves the stream intact for a later retry.
+        """
+        path = self._msg_path(source, self.pid, tag, seq)
+        if not path.exists():
+            return _NOT_READY
+        try:
+            obj = _decode_frame(self._map_file(path))
+        except FileNotFoundError:  # lost a race with another local thread
+            return _NOT_READY
+        if not isinstance(obj, _ChunkHeader):
+            os.unlink(path)
+            return obj
+        chunks = [
+            self._msg_path(source, self.pid, ("__chunk", tag, seq), i)
+            for i in range(obj.nchunks)
+        ]
+        if not all(p.exists() for p in chunks):
+            return _NOT_READY  # pieces still in flight; claim nothing
+        # reassemble straight into one writable buffer: no per-piece
+        # intermediate copies, and the decoded arrays stay mutable (bytes
+        # would hand pickle read-only views)
+        blob = bytearray(obj.total)
+        view = memoryview(blob)
+        off = 0
+        for p in chunks:
+            with open(p, "rb") as f:
+                while off < obj.total:
+                    n = f.readinto(view[off:])
+                    if not n:
+                        break
+                    off += n
+        if off != obj.total:
+            raise ValueError(
+                f"chunked payload reassembled to {off} bytes, "
+                f"expected {obj.total}"
+            )
+        out = _decode_frame(blob)
+        os.unlink(path)
+        for p in chunks:
+            os.unlink(p)
+        return out
 
     def recv(self, source: int, tag: Any, timeout: float | None = None) -> Any:
         if not (0 <= source < self.np_):
             raise ValueError(f"source {source} out of range for np={self.np_}")
         key = (source, _tag_token(tag))
         seq = self._recv_seq.get(key, 0)
-        self._recv_seq[key] = seq + 1
-        path = self._msg_path(source, self.pid, tag, seq)
         deadline = time.monotonic() + (
             DEFAULT_RECV_TIMEOUT if timeout is None else timeout
         )
         pause = _POLL_MIN
         while True:
-            if path.exists():
-                try:
-                    with open(path, "rb") as f:
-                        obj = pickle.load(f)
-                except (EOFError, FileNotFoundError):
-                    time.sleep(pause)
-                    continue
-                os.unlink(path)
+            obj = self._try_claim(source, tag, seq)
+            if obj is not _NOT_READY:
+                self._recv_seq[key] = seq + 1  # commit only after the claim
                 return obj
             if time.monotonic() > deadline:
                 dead = self.dead_ranks()
@@ -113,10 +320,39 @@ class FileMPI(CommContext):
             time.sleep(pause)
             pause = min(pause * 2, _POLL_MAX)
 
-    def probe(self, source: int, tag: Any) -> bool:
+    def irecv(self, source: int, tag: Any) -> Request:
+        if not (0 <= source < self.np_):
+            raise ValueError(f"source {source} out of range for np={self.np_}")
         key = (source, _tag_token(tag))
         seq = self._recv_seq.get(key, 0)
-        return self._msg_path(source, self.pid, tag, seq).exists()
+        self._recv_seq[key] = seq + 1  # reserve the stream slot now
+        return _FileRecvRequest(self, source, tag, seq)
+
+    def probe(self, source: int, tag: Any) -> bool:
+        """True only when the next message is *fully* claimable — for a
+        chunked payload that means the header and every piece, so a probe
+        hit guarantees the matching recv does not block on the sender.
+
+        Cost: one 17-byte footer read; only a chunk *header* (a tiny
+        frame) is ever decoded here, never a payload."""
+        key = (source, _tag_token(tag))
+        seq = self._recv_seq.get(key, 0)
+        path = self._msg_path(source, self.pid, tag, seq)
+        if not path.exists():
+            return False
+        foot = _read_footer(path)
+        if foot is None:
+            return False
+        if not foot[2] & _FLAG_CHUNKED:
+            return True
+        try:
+            hdr = _decode_frame(self._map_file(path))
+        except (FileNotFoundError, ValueError):
+            return False
+        return all(
+            self._msg_path(source, self.pid, ("__chunk", tag, seq), i).exists()
+            for i in range(hdr.nchunks)
+        )
 
     # -- broadcast: single payload file, reference-counted --------------------
 
@@ -131,12 +367,7 @@ class FileMPI(CommContext):
         self._send_seq[key] = seq + 1
         payload = self.dir / f"bc_r{root}_q{seq}_{_tag_token(tag)}.buf"
         if self.pid == root:
-            tmp = payload.with_suffix(f".tmp{os.getpid()}")
-            with open(tmp, "wb") as f:
-                pickle.dump(obj, f, protocol=5)
-                f.flush()
-                os.fsync(f.fileno())
-            os.rename(tmp, payload)
+            self._publish(payload, _encode_frame(obj))
             return obj
         deadline = time.monotonic() + DEFAULT_RECV_TIMEOUT
         pause = _POLL_MIN
@@ -147,8 +378,7 @@ class FileMPI(CommContext):
                 )
             time.sleep(pause)
             pause = min(pause * 2, _POLL_MAX)
-        with open(payload, "rb") as f:
-            obj = pickle.load(f)
+        obj = _decode_frame(self._map_file(payload))
         done = payload.with_suffix(f".done{self.pid}")
         done.touch()
         # last reader reclaims payload + markers (best-effort)

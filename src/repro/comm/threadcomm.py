@@ -17,11 +17,14 @@ from typing import Any, Callable
 from .context import (
     DEFAULT_RECV_TIMEOUT,
     CommContext,
+    Request,
     StragglerTimeout,
     set_context,
 )
 
 __all__ = ["ThreadComm", "ThreadWorld", "run_spmd"]
+
+_MISSING = object()
 
 
 class ThreadWorld:
@@ -48,6 +51,11 @@ class ThreadWorld:
                 self._lock.wait(min(remaining, 0.2))
             return self._box.pop(key)
 
+    def take_nowait(self, key: tuple) -> Any:
+        """Claim ``key`` if posted, else return the ``_MISSING`` sentinel."""
+        with self._lock:
+            return self._box.pop(key, _MISSING)
+
     def peek(self, key: tuple) -> bool:
         with self._lock:
             return key in self._box
@@ -59,12 +67,53 @@ def _freeze(tag: Any):
     return tag
 
 
+class _ThreadRecvRequest(Request):
+    """Receive handle bound to a reserved (source, tag, seq) slot."""
+
+    def __init__(self, world: ThreadWorld, key: tuple):
+        self._world = world
+        self._box_key = key
+        self._done = False
+        self._value: Any = None
+
+    def test(self) -> bool:
+        if not self._done:
+            got = self._world.take_nowait(self._box_key)
+            if got is not _MISSING:
+                self._value = got
+                self._done = True
+        return self._done
+
+    def wait(self, timeout: float | None = None) -> Any:
+        if not self._done:
+            self._value = self._world.take(
+                self._box_key,
+                DEFAULT_RECV_TIMEOUT if timeout is None else timeout,
+            )
+            self._done = True
+        return self._value
+
+
 class ThreadComm(CommContext):
+    """In-process rank endpoint.
+
+    Payloads travel **by reference**: ``send`` posts the object itself into
+    the shared mailbox (no pickling, no copy), so an ndarray arrives as the
+    identical buffer the sender handed over.  Senders of mutable payloads
+    must therefore either stop mutating after posting or send an explicit
+    copy — exactly MPI's "don't touch the buffer until the send completes"
+    contract, except completion here is the matching receive.
+    """
+
     def __init__(self, world: ThreadWorld, pid: int):
         self.world = world
         self.np_ = world.np_
         self.pid = pid
         self._send_seq: dict[tuple, int] = defaultdict(int)
+        # next *unreserved* receive seq per (source, tag): blocking recv
+        # commits it only after the message is claimed (a timed-out recv
+        # leaves the stream position unchanged); irecv reserves it eagerly
+        # so several receives can be outstanding on one stream.
         self._recv_seq: dict[tuple, int] = defaultdict(int)
 
     def _key(self, src: int, dst: int, tag: Any, seq: int) -> tuple:
@@ -81,10 +130,19 @@ class ThreadComm(CommContext):
     def recv(self, source: int, tag: Any, timeout: float | None = None) -> Any:
         k = (source, _freeze(tag))
         seq = self._recv_seq[k]
-        self._recv_seq[k] = seq + 1
-        return self.world.take(
+        obj = self.world.take(
             self._key(source, self.pid, tag, seq),
             DEFAULT_RECV_TIMEOUT if timeout is None else timeout,
+        )
+        self._recv_seq[k] = seq + 1  # commit only after a successful claim
+        return obj
+
+    def irecv(self, source: int, tag: Any) -> Request:
+        k = (source, _freeze(tag))
+        seq = self._recv_seq[k]
+        self._recv_seq[k] = seq + 1  # reserve the stream slot now
+        return _ThreadRecvRequest(
+            self.world, self._key(source, self.pid, tag, seq)
         )
 
     def probe(self, source: int, tag: Any) -> bool:

@@ -8,6 +8,12 @@ imported lazily so SPMD file-MPI workers never pay the JAX import.
 
 from .dmap import Dmap
 from .dmat import Dmat, redistribute
+from .redist import (
+    RedistPlan,
+    clear_plan_cache,
+    get_plan,
+    plan_cache_stats,
+)
 from .ops import (
     agg,
     agg_all,
@@ -48,6 +54,10 @@ __all__ = [
     "Dmap",
     "Dmat",
     "redistribute",
+    "RedistPlan",
+    "get_plan",
+    "plan_cache_stats",
+    "clear_plan_cache",
     "FALLS",
     "falls_indices",
     "falls_intersect",

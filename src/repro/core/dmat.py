@@ -22,7 +22,7 @@ import numpy as np
 from ..comm import get_context
 from ..comm.context import CommContext
 from .dmap import Dmap
-from .pitfalls import falls_list_indices, falls_list_intersect
+from .redist import halo_extents_cached, owned_indices_cached, redistribute
 
 __all__ = ["Dmat", "redistribute"]
 
@@ -72,20 +72,11 @@ class Dmat:
 
     def _index_cache(self):
         if self.__owned is None:
+            # shared per-(map, shape, rank) cache: every Dmat built under
+            # the same map reuses one set of index arrays (see redist.py)
             pid = self.ctx.pid
-            dmap = self.dmap
-            if dmap.inmap(pid):
-                self.__owned = [
-                    dmap.local_indices(self.shape, d, pid)
-                    for d in range(dmap.ndim)
-                ]
-                self.__halo = [
-                    dmap.halo_extent(self.shape, d, pid)
-                    for d in range(dmap.ndim)
-                ]
-            else:
-                self.__owned = [np.empty(0, dtype=np.int64) for _ in self.shape]
-                self.__halo = [0 for _ in self.shape]
+            self.__owned = list(owned_indices_cached(self.dmap, self.shape, pid))
+            self.__halo = list(halo_extents_cached(self.dmap, self.shape, pid))
         return self.__owned, self.__halo
 
     @property
@@ -204,10 +195,18 @@ class Dmat:
 
     # -- global reductions ---------------------------------------------------------
 
-    def _allreduce(self, local_val, op) -> Any:
+    def _allreduce(self, local_val, op, identity=None, name: str = "reduce") -> Any:
         vals = self.ctx.allgather(local_val, tag="__pp_red")
-        # ranks outside the map contribute identity-free entries (None)
+        # ranks outside the map (and empty local parts) contribute None
         vals = [v for v in vals if v is not None]
+        if not vals:
+            # zero-size global array: sum has an identity, max/min do not
+            if identity is not None:
+                return identity
+            raise ValueError(
+                f"zero-size Dmat reduction '{name}' has no identity "
+                f"(shape {self.shape})"
+            )
         out = vals[0]
         for v in vals[1:]:
             out = op(out, v)
@@ -216,17 +215,19 @@ class Dmat:
     def sum(self):
         own = self.local_view_owned()
         loc = own.sum() if own.size else None
-        return self._allreduce(loc, lambda a, b: a + b)
+        return self._allreduce(
+            loc, lambda a, b: a + b, identity=self.dtype.type(0), name="sum"
+        )
 
     def max(self):
         own = self.local_view_owned()
         loc = own.max() if own.size else None
-        return self._allreduce(loc, max)
+        return self._allreduce(loc, max, name="max")
 
     def min(self):
         own = self.local_view_owned()
         loc = own.min() if own.size else None
-        return self._allreduce(loc, min)
+        return self._allreduce(loc, min, name="min")
 
     # -- subscripted assignment: THE communication operator ------------------------
 
@@ -326,87 +327,6 @@ def _parse_region(key, shape) -> list[tuple[int, int]]:
 
 
 # -----------------------------------------------------------------------------
-# Redistribution (PITFALLS-scheduled, PythonMPI-executed)
+# Redistribution now lives in redist.py (plan-cached, isend/irecv-executed);
+# ``redistribute`` is re-exported above for the paper-facing API surface.
 # -----------------------------------------------------------------------------
-
-
-def redistribute(dst: Dmat, src: Dmat, region=None) -> None:
-    """``dst[region] = src``: general block-cyclic redistribution.
-
-    ``region`` is the per-dim half-open target window in dst's global index
-    space (defaults to the whole array); ``src`` global index ``g`` lands at
-    dst index ``g + region_start`` per dim.  PITFALLS computes, for every
-    (sender, receiver) pair, the exact per-dim index sets to move; payloads
-    are the cross-product blocks in sorted-global order.  All sends are
-    posted before any receive (the transports are one-sided), so no
-    ordering can deadlock.
-    """
-    if region is None:
-        region = [(0, n) for n in src.shape]
-    rshape = tuple(stop - start for start, stop in region)
-    if rshape != src.shape:
-        raise ValueError(
-            f"target region shape {rshape} != source shape {src.shape}"
-        )
-    if len(src.shape) != len(dst.shape):
-        raise ValueError("rank mismatch in redistribution")
-    ctx = dst.ctx
-    me = ctx.pid
-    tag_base = ("__redist", _ctx_counter(ctx, "redist"))
-    offsets = [start for start, _ in region]
-
-    src_ranks = src.dmap.proclist
-    dst_ranks = dst.dmap.proclist
-
-    def pair_indices(s_rank: int, d_rank: int):
-        """Per-dim global dst-space indices exchanged by (s_rank, d_rank)."""
-        out = []
-        for d in range(dst.ndim):
-            src_falls = src.dmap.dim_falls(src.shape, d, s_rank)
-            # shift source index space into the dst window
-            off = offsets[d]
-            shifted = [
-                type(f)(f.l + off, f.r + off, f.s, f.n) for f in src_falls
-            ]
-            dst_falls = dst.dmap.dim_falls(dst.shape, d, d_rank)
-            # clip dst ownership to the target window
-            lo, hi = region[d]
-            hit = falls_list_intersect(shifted, dst_falls)
-            idx = falls_list_indices(hit)
-            idx = idx[(idx >= lo) & (idx < hi)]
-            if len(idx) == 0:
-                return None
-            out.append(idx)
-        return out
-
-    # -- post all sends ---------------------------------------------------------
-    if src.dmap.inmap(me):
-        for d_rank in dst_ranks:
-            idx = pair_indices(me, d_rank)
-            if idx is None:
-                continue
-            src_pos = [
-                src._local_positions(d, g - offsets[d])
-                for d, g in enumerate(idx)
-            ]
-            block = src.local[np.ix_(*src_pos)]
-            if d_rank == me:
-                _place(dst, idx, block)
-            else:
-                ctx.send(d_rank, (tag_base, me), block)
-
-    # -- drain receives -----------------------------------------------------------
-    if dst.dmap.inmap(me):
-        for s_rank in src_ranks:
-            if s_rank == me:
-                continue  # handled as the local copy above
-            idx = pair_indices(s_rank, me)
-            if idx is None:
-                continue
-            block = ctx.recv(s_rank, (tag_base, s_rank))
-            _place(dst, idx, block)
-
-
-def _place(dst: Dmat, idx_global, block: np.ndarray) -> None:
-    dst_pos = [dst._local_positions(d, g) for d, g in enumerate(idx_global)]
-    dst.local[np.ix_(*dst_pos)] = block

@@ -18,7 +18,7 @@ import numpy as np
 
 from ..comm import get_context
 from .dmap import Dmap
-from .dmat import Dmat
+from .dmat import Dmat, _ctx_counter
 
 __all__ = [
     "zeros",
@@ -205,21 +205,37 @@ def put_local(a, x) -> None:
 def agg(a, root: int | None = None):
     """Gather the global array onto the leader (root defaults to the first
     processor of the map).  Returns the assembled ndarray on the leader and
-    ``None`` elsewhere; identity for plain ndarrays."""
+    ``None`` elsewhere; identity for plain ndarrays.
+
+    Only ranks holding data send (one ``isend`` each); the root completes
+    the receives in arrival order, so one slow rank never serializes the
+    assembly of the others."""
     if not isinstance(a, Dmat):
         return a
     ctx = a.ctx
     root = a.dmap.proclist[0] if root is None else root
-    payload = None
-    if a.dmap.inmap(ctx.pid):
-        payload = ([a.owned_indices(d) for d in range(a.ndim)], a.local_view_owned())
-    parts = ctx.gather(root, payload)
-    if ctx.pid != root:
+    me = ctx.pid
+    tag = ("__pp_agg", _ctx_counter(ctx, "agg"))
+    in_map = a.dmap.inmap(me)
+    if me != root:
+        if in_map:
+            # copy pins the payload: ThreadComm hands arrays by reference,
+            # and the sender may mutate its local part before the root drains
+            ctx.isend(
+                root,
+                tag,
+                ([a.owned_indices(d) for d in range(a.ndim)],
+                 a.local_view_owned().copy()),
+            )
         return None
     out = np.zeros(a.shape, dtype=a.dtype)
-    for part in parts:
-        if part is None:
-            continue
+    if in_map:
+        idx = [a.owned_indices(d) for d in range(a.ndim)]
+        if all(len(i) for i in idx):
+            out[np.ix_(*idx)] = a.local_view_owned()
+    senders = [p for p in a.dmap.proclist if p != root]
+    reqs = [ctx.irecv(src, tag) for src in senders]
+    for part in ctx.wait_all(reqs):
         idx, block = part
         if all(len(i) for i in idx):
             out[np.ix_(*idx)] = block
@@ -288,8 +304,9 @@ def synch(a) -> None:
 
     Halos extend toward higher indices: along each overlapped dim, the
     successor processor sends its first ``o`` owned slices, which land in
-    the caller's halo.  One-sided sends first, then receives — deadlock
-    free on every transport."""
+    the caller's halo.  All sends are posted non-blocking first, then all
+    receives, completed in arrival order — deadlock free on every
+    transport and never serialized on one slow neighbor."""
     if not isinstance(a, Dmat):
         return
     ctx = a.ctx
@@ -297,8 +314,8 @@ def synch(a) -> None:
     if not a.dmap.inmap(me):
         return
     coords = a.dmap.grid_position(me)
-    tag_base = ("__synch", _synch_counter(ctx))
-    sends, recvs = [], []
+    tag_base = ("__synch", _ctx_counter(ctx, "synch"))
+    recvs = []
     for d in range(a.ndim):
         o = a.dmap.overlap[d]
         if o == 0 or a.dmap.grid[d] == 1:
@@ -306,38 +323,34 @@ def synch(a) -> None:
         c = coords[d]
         owned_len = len(a.owned_indices(d))
         if c > 0 and owned_len:
-            # ship my first min(o, owned) slices to my predecessor
+            # ship my first min(o, owned) slices to my predecessor; the
+            # copy pins the payload so later local mutation can't race the
+            # neighbor's receive (ThreadComm hands arrays by reference)
             prev = list(coords)
             prev[d] = c - 1
             k = min(o, owned_len)
             sl = [slice(None)] * a.ndim
             sl[d] = slice(0, k)
-            sends.append((a.dmap.pid_at(prev), (tag_base, d), a.local[tuple(sl)].copy()))
+            ctx.isend(a.dmap.pid_at(prev), (tag_base, d), a.local[tuple(sl)].copy())
         h = a._halo[d]
         if h > 0:
             nxt = list(coords)
             nxt[d] = c + 1
             sl = [slice(None)] * a.ndim
             sl[d] = slice(owned_len, owned_len + h)
-            recvs.append((a.dmap.pid_at(nxt), (tag_base, d), d, tuple(sl), h))
-    for dest, tag, payload in sends:
-        ctx.send(dest, tag, payload)
-    for src, tag, d, sl, h in recvs:
-        block = ctx.recv(src, tag)
+            recvs.append((ctx.irecv(a.dmap.pid_at(nxt), (tag_base, d)), d, tuple(sl), h))
+    blocks = ctx.wait_all([r for r, *_ in recvs])
+    for (_, d, sl, h), block in zip(recvs, blocks):
         clip = [slice(None)] * a.ndim
         clip[d] = slice(0, h)
         a.local[sl] = block[tuple(clip)]
 
 
-def _synch_counter(ctx) -> int:
-    from .dmat import _ctx_counter
-
-    return _ctx_counter(ctx, "synch")
-
-
 def transpose_grid(a: Dmat) -> Dmat:
     """Convenience: redistribute a 2-D Dmat to the transposed grid
-    (row map <-> column map), the paper's FFT corner-turn."""
+    (row map <-> column map), the paper's FFT corner-turn.  ``Dmap`` is
+    value-hashable, so the freshly built transposed map hits the same
+    plan/index cache entries on every call."""
     if a.ndim != 2:
         raise ValueError("transpose_grid expects a 2-D Dmat")
     g = a.dmap.grid

@@ -278,6 +278,12 @@ def parse_dist(dist: dict | str | None) -> tuple[str, int]:
     """Normalize a per-dimension distribution spec to ``(kind, block_size)``."""
     if dist is None:
         return "b", 0
+    if isinstance(dist, tuple):
+        # already-normalized (kind, block_size) — idempotent re-parse, so
+        # a Dmap's own ``dist`` entries can seed a derived map
+        if len(dist) == 2 and dist[0] in ("b", "c", "bc"):
+            return dist[0], int(dist[1])
+        raise ValueError(f"unknown distribution tuple {dist!r}")
     if isinstance(dist, str):
         if dist in ("b", "block", ""):
             return "b", 0

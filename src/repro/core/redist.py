@@ -1,0 +1,358 @@
+"""Redistribution engine v2: memoized PITFALLS plans (paper §III.C).
+
+``Z[:, :] = X`` is pPython's communication operator, and the follow-up
+performance study (arXiv:2309.03931) shows its cost splits into *schedule
+computation* — the O(P²·ndim) PITFALLS intersection deciding who sends
+which indices to whom — and *data movement*.  The schedule depends only on
+``(src map, dst map, shapes, region, rank)``, none of which change across
+the iterations of an FFT corner-turn or a halo-exchange loop, so it is
+computed once per key and cached here (pMatlab computed its communication
+schedules once per map pair a generation ago; this module is the pPython
+equivalent).
+
+A cached :class:`RedistPlan` holds, for the owning rank: the local source
+positions of every outbound block, the local destination positions of
+every inbound block, the self-copy positions, and a *deterministic*
+message tag (SHA-1 of the canonical key — ``hash()`` is salted per
+process and would desync FileMPI ranks).  Steady-state redistribution is
+then pure data movement over the non-blocking ``isend``/``irecv``
+primitives, with receives completed in arrival order.
+
+The per-(map, shape, rank) owned-index arrays are cached here too and
+shared with ``Dmat`` and ``scatter`` — constructing many arrays under one
+map (the common SPMD pattern) pays the index bookkeeping once.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Sequence
+
+import numpy as np
+
+from .dmap import Dmap
+from .pitfalls import falls_list_indices, falls_list_intersect
+
+__all__ = [
+    "RedistPlan",
+    "redistribute",
+    "get_plan",
+    "plan_cache_stats",
+    "clear_plan_cache",
+    "owned_indices_cached",
+    "halo_extents_cached",
+]
+
+
+# ---------------------------------------------------------------------------
+# Small thread-safe LRU (ThreadComm runs all ranks in one process)
+# ---------------------------------------------------------------------------
+
+
+class _LRU:
+    def __init__(self, maxsize: int):
+        self.maxsize = maxsize
+        self._d: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key):
+        with self._lock:
+            if key in self._d:
+                self._d.move_to_end(key)
+                self.hits += 1
+                return self._d[key]
+            self.misses += 1
+            return None
+
+    def put(self, key, value) -> None:
+        with self._lock:
+            self._d[key] = value
+            self._d.move_to_end(key)
+            while len(self._d) > self.maxsize:
+                self._d.popitem(last=False)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._d.clear()
+            self.hits = 0
+            self.misses = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._d)
+
+
+def _cache_size(env: str, default: int) -> int:
+    try:
+        return max(1, int(os.environ.get(env, default)))
+    except ValueError:
+        return default
+
+
+_plan_cache = _LRU(_cache_size("PPYTHON_PLAN_CACHE_SIZE", 128))
+_owned_cache = _LRU(_cache_size("PPYTHON_INDEX_CACHE_SIZE", 512))
+_halo_cache = _LRU(_cache_size("PPYTHON_INDEX_CACHE_SIZE", 512))
+
+
+def owned_indices_cached(
+    dmap: Dmap, shape: tuple[int, ...], pid: int
+) -> tuple[np.ndarray, ...]:
+    """Per-dim sorted owned global indices of ``pid`` (cached, shared)."""
+    key = (dmap, shape, pid)
+    got = _owned_cache.get(key)
+    if got is None:
+        if dmap.inmap(pid):
+            got = tuple(
+                dmap.local_indices(shape, d, pid) for d in range(dmap.ndim)
+            )
+        else:
+            got = tuple(np.empty(0, dtype=np.int64) for _ in shape)
+        for arr in got:
+            # the arrays are shared by every Dmat under this (map, shape,
+            # rank): freeze them so a consumer can't silently corrupt the
+            # index bookkeeping of its siblings
+            arr.setflags(write=False)
+        _owned_cache.put(key, got)
+    return got
+
+
+def halo_extents_cached(
+    dmap: Dmap, shape: tuple[int, ...], pid: int
+) -> tuple[int, ...]:
+    """Per-dim halo extents of ``pid`` (cached, shared)."""
+    key = (dmap, shape, pid)
+    got = _halo_cache.get(key)
+    if got is None:
+        if dmap.inmap(pid):
+            got = tuple(
+                dmap.halo_extent(shape, d, pid) for d in range(dmap.ndim)
+            )
+        else:
+            got = tuple(0 for _ in shape)
+        _halo_cache.put(key, got)
+    return got
+
+
+# ---------------------------------------------------------------------------
+# Plans
+# ---------------------------------------------------------------------------
+
+
+def _canonical(dmap: Dmap) -> tuple:
+    return (dmap.grid, dmap.dist, dmap.proclist, dmap.overlap, dmap.order)
+
+
+def _stable_tag(src_dmap, dst_dmap, src_shape, dst_shape, region) -> str:
+    """Process-independent message tag for one (map pair, shapes, region).
+
+    Must hash identically on every FileMPI rank (separate processes), so
+    it digests a canonical repr rather than using the salted ``hash()``.
+    """
+    blob = repr(
+        (_canonical(src_dmap), _canonical(dst_dmap), src_shape, dst_shape, region)
+    )
+    return hashlib.sha1(blob.encode()).hexdigest()[:12]
+
+
+def _positions(owned: np.ndarray, gidx: np.ndarray, dim: int, pid: int) -> np.ndarray:
+    """Local storage positions of owned global indices (validated)."""
+    pos = np.searchsorted(owned, gidx)
+    if np.any(pos >= len(owned)) or np.any(owned[pos] != gidx):
+        raise IndexError(
+            f"global indices not owned by rank {pid} along dim {dim}"
+        )
+    return pos
+
+
+@dataclass
+class RedistPlan:
+    """One rank's complete communication schedule for a redistribution.
+
+    ``sends``/``recvs`` pair a peer rank with the per-dim *local* positions
+    of the block exchanged (source positions when sending, destination
+    positions when receiving); ``local_copy`` is the self-overlap.  The
+    plan is pure index data — executing it does no PITFALLS math.
+    """
+
+    tag: tuple
+    ndim: int
+    sends: list[tuple[int, tuple[np.ndarray, ...]]] = field(default_factory=list)
+    recvs: list[tuple[int, tuple[np.ndarray, ...]]] = field(default_factory=list)
+    local_copy: tuple[tuple[np.ndarray, ...], tuple[np.ndarray, ...]] | None = None
+
+    @property
+    def msg_count(self) -> int:
+        return len(self.sends) + len(self.recvs)
+
+    def execute(self, dst, src) -> None:
+        """Move the data: post all sends, self-copy, then complete the
+        receives in arrival order.  All sends are posted before any
+        receive (one-sided transports), so no ordering can deadlock."""
+        ctx = dst.ctx
+        for peer, src_pos in self.sends:
+            ctx.isend(peer, self.tag, src.local[np.ix_(*src_pos)])
+        if self.local_copy is not None:
+            src_pos, dst_pos = self.local_copy
+            dst.local[np.ix_(*dst_pos)] = src.local[np.ix_(*src_pos)]
+        if self.recvs:
+            reqs = [ctx.irecv(peer, self.tag) for peer, _ in self.recvs]
+            blocks = ctx.wait_all(reqs)
+            for (peer, dst_pos), block in zip(self.recvs, blocks):
+                dst.local[np.ix_(*dst_pos)] = block
+
+
+def build_plan(
+    src_dmap: Dmap,
+    src_shape: tuple[int, ...],
+    dst_dmap: Dmap,
+    dst_shape: tuple[int, ...],
+    region: tuple[tuple[int, int], ...],
+    me: int,
+) -> RedistPlan:
+    """Compute rank ``me``'s schedule from scratch (the cold path).
+
+    For every (sender, receiver) pair, the per-dim PITFALLS intersection
+    of the sender's ownership (shifted into the destination window) with
+    the receiver's ownership (clipped to the window) yields exactly the
+    global indices the pair exchanges; a pair moves data only when every
+    dimension's set is non-empty (the exchanged block is the cross
+    product).
+    """
+    ndim = len(dst_shape)
+    offsets = tuple(start for start, _ in region)
+    plan = RedistPlan(
+        tag=("__rd", _stable_tag(src_dmap, dst_dmap, src_shape, dst_shape, region)),
+        ndim=ndim,
+    )
+
+    def pair_indices(s_rank: int, d_rank: int):
+        """Per-dim global dst-space indices exchanged by (s_rank, d_rank)."""
+        out = []
+        for d in range(ndim):
+            src_falls = src_dmap.dim_falls(src_shape, d, s_rank)
+            off = offsets[d]
+            shifted = [
+                type(f)(f.l + off, f.r + off, f.s, f.n) for f in src_falls
+            ]
+            dst_falls = dst_dmap.dim_falls(dst_shape, d, d_rank)
+            lo, hi = region[d]
+            hit = falls_list_intersect(shifted, dst_falls)
+            idx = falls_list_indices(hit)
+            idx = idx[(idx >= lo) & (idx < hi)]
+            if len(idx) == 0:
+                return None
+            out.append(idx)
+        return out
+
+    local_src_pos: tuple[np.ndarray, ...] | None = None
+    if src_dmap.inmap(me):
+        src_owned = owned_indices_cached(src_dmap, src_shape, me)
+        for d_rank in dst_dmap.proclist:
+            idx = pair_indices(me, d_rank)
+            if idx is None:
+                continue
+            src_pos = tuple(
+                _positions(src_owned[d], g - offsets[d], d, me)
+                for d, g in enumerate(idx)
+            )
+            if d_rank == me:
+                local_src_pos = src_pos
+            else:
+                plan.sends.append((d_rank, src_pos))
+
+    if dst_dmap.inmap(me):
+        dst_owned = owned_indices_cached(dst_dmap, dst_shape, me)
+        for s_rank in src_dmap.proclist:
+            idx = pair_indices(s_rank, me)
+            if idx is None:
+                continue
+            dst_pos = tuple(
+                _positions(dst_owned[d], g, d, me) for d, g in enumerate(idx)
+            )
+            if s_rank == me:
+                plan.local_copy = (local_src_pos, dst_pos)
+            else:
+                plan.recvs.append((s_rank, dst_pos))
+
+    return plan
+
+
+def _cache_enabled() -> bool:
+    return os.environ.get("PPYTHON_REDIST_CACHE", "1") not in ("0", "off", "no")
+
+
+def get_plan(
+    src_dmap: Dmap,
+    src_shape: tuple[int, ...],
+    dst_dmap: Dmap,
+    dst_shape: tuple[int, ...],
+    region: tuple[tuple[int, int], ...],
+    me: int,
+    use_cache: bool | None = None,
+) -> RedistPlan:
+    """Fetch (or build and memoize) rank ``me``'s plan for this key."""
+    src_shape = tuple(int(s) for s in src_shape)
+    dst_shape = tuple(int(s) for s in dst_shape)
+    region = tuple((int(a), int(b)) for a, b in region)
+    if use_cache is None:
+        use_cache = _cache_enabled()
+    if not use_cache:
+        return build_plan(src_dmap, src_shape, dst_dmap, dst_shape, region, me)
+    key = (src_dmap, src_shape, dst_dmap, dst_shape, region, me)
+    plan = _plan_cache.get(key)
+    if plan is None:
+        plan = build_plan(src_dmap, src_shape, dst_dmap, dst_shape, region, me)
+        _plan_cache.put(key, plan)
+    return plan
+
+
+def plan_cache_stats() -> dict[str, Any]:
+    """Hit/miss counters for the plan cache (benchmark + test hook)."""
+    hits, misses = _plan_cache.hits, _plan_cache.misses
+    total = hits + misses
+    return {
+        "hits": hits,
+        "misses": misses,
+        "entries": len(_plan_cache),
+        "hit_rate": (hits / total) if total else 0.0,
+    }
+
+
+def clear_plan_cache() -> None:
+    _plan_cache.clear()
+
+
+# ---------------------------------------------------------------------------
+# The communication operator
+# ---------------------------------------------------------------------------
+
+
+def redistribute(dst, src, region=None, use_cache: bool | None = None) -> None:
+    """``dst[region] = src``: general block-cyclic redistribution.
+
+    ``region`` is the per-dim half-open target window in dst's global
+    index space (defaults to the whole array); ``src`` global index ``g``
+    lands at dst index ``g + region_start`` per dim.  The schedule comes
+    from the plan cache; execution is pure data movement.
+    """
+    if region is None:
+        region = [(0, n) for n in src.shape]
+    region = tuple((int(a), int(b)) for a, b in region)
+    rshape = tuple(stop - start for start, stop in region)
+    if rshape != src.shape:
+        raise ValueError(
+            f"target region shape {rshape} != source shape {src.shape}"
+        )
+    if len(src.shape) != len(dst.shape):
+        raise ValueError("rank mismatch in redistribution")
+    plan = get_plan(
+        src.dmap, src.shape, dst.dmap, dst.shape, region,
+        dst.ctx.pid, use_cache=use_cache,
+    )
+    plan.execute(dst, src)

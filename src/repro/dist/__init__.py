@@ -1,0 +1,8 @@
+"""JAX-side distribution helpers for the model/serving stack.
+
+``repro.core`` is the NumPy PGAS layer from the paper; this package holds
+the pieces that translate its mapping ideas into JAX/GSPMD land.  Only
+``hints`` ships today — ``sharding`` (Dmap → PartitionSpec trees) and
+``memmodel`` (analytic per-device HBM) are the next planned layers; the
+callers that need them import lazily and degrade when absent.
+"""

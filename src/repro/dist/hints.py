@@ -1,0 +1,55 @@
+"""Sharding hints: ``constrain`` + ``mesh_context``.
+
+``constrain(x, *axes)`` annotates an intermediate with the mesh axis each
+tensor dimension should be sharded over (``None`` = replicated).  With a
+mesh installed via ``mesh_context`` it lowers to
+``jax.lax.with_sharding_constraint``; with no mesh active — the maps-off
+analogue for the JAX stack — it is the identity, so model code runs
+unchanged on a single device.  Axis names that the active mesh does not
+define are treated as replicated rather than erroring, letting one model
+body serve 1-D and 2-D meshes.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+__all__ = ["constrain", "mesh_context", "current_mesh"]
+
+_state = threading.local()
+
+
+def current_mesh():
+    """The mesh installed by the innermost ``mesh_context`` (or None)."""
+    stack = getattr(_state, "meshes", None)
+    return stack[-1] if stack else None
+
+
+@contextmanager
+def mesh_context(mesh):
+    """Install ``mesh`` as the active target for ``constrain`` hints."""
+    stack = getattr(_state, "meshes", None)
+    if stack is None:
+        stack = _state.meshes = []
+    stack.append(mesh)
+    try:
+        yield mesh
+    finally:
+        stack.pop()
+
+
+def constrain(x, *axes):
+    """Hint that dim ``i`` of ``x`` is sharded over mesh axis ``axes[i]``.
+
+    Identity when no mesh is active.  Trailing unhinted dims replicate.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    from jax.lax import with_sharding_constraint
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    names = set(mesh.axis_names)
+    spec = PartitionSpec(*[a if a in names else None for a in axes])
+    return with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -11,8 +11,7 @@ import pytest
 
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.models.mamba2 import ssd_chunked
 from repro.models.rwkv6 import wkv6_chunked

@@ -1,0 +1,231 @@
+"""Non-blocking primitives + zero-copy payload paths, on both transports.
+
+Covers the acceptance criteria for the redistribution engine v2 comm
+layer: isend/irecv request semantics, byte-identical payload delivery for
+contiguous and non-contiguous blocks, the FileMPI pickle-5 out-of-band
+frame (header + raw buffers, one file), chunking over
+``PPYTHON_MAX_MSG_BYTES``, ThreadComm by-reference handoff, and the
+receive-sequence desync regression.
+"""
+
+import pickle
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.comm import CommContext, FileMPI, StragglerTimeout
+from repro.comm.threadcomm import ThreadComm, ThreadWorld
+
+
+@pytest.fixture
+def filectx(tmp_path):
+    return FileMPI(np_=2, pid=0, comm_dir=tmp_path, heartbeat=False)
+
+
+@pytest.fixture
+def threadpair():
+    world = ThreadWorld(2)
+    return ThreadComm(world, 0), ThreadComm(world, 1)
+
+
+PAYLOADS = {
+    "contig_f64": lambda: np.arange(300.0),
+    "contig_c128": lambda: np.arange(64.0).reshape(8, 8) * (1 + 2j),
+    "noncontig_slice": lambda: np.arange(200.0).reshape(10, 20)[::2, 1::3],
+    "fortran_order": lambda: np.asfortranarray(np.arange(24.0).reshape(4, 6)),
+    "zero_size": lambda: np.empty((0, 3)),
+    "object": lambda: {"idx": [1, 2, 3], "name": "meta"},
+}
+
+
+class TestByteIdentical:
+    @pytest.mark.parametrize("name", sorted(PAYLOADS))
+    def test_filempi(self, filectx, name):
+        obj = PAYLOADS[name]()
+        filectx.send(0, name, obj)
+        got = filectx.recv(0, name)
+        if isinstance(obj, np.ndarray):
+            assert got.dtype == obj.dtype and got.shape == obj.shape
+            np.testing.assert_array_equal(got, obj)
+            assert got.tobytes() == obj.tobytes()
+        else:
+            assert got == obj
+
+    @pytest.mark.parametrize("name", sorted(PAYLOADS))
+    def test_threadcomm(self, threadpair, name):
+        t0, t1 = threadpair
+        obj = PAYLOADS[name]()
+        t0.send(1, name, obj)
+        got = t1.recv(0, name)
+        if isinstance(obj, np.ndarray):
+            assert got is obj  # by-reference handoff: zero copies
+        else:
+            assert got == obj
+
+    def test_filempi_received_array_is_writable(self, filectx):
+        """COW-mmap payloads must still behave like normal arrays."""
+        filectx.send(0, "w", np.zeros(100))
+        got = filectx.recv(0, "w")
+        got += 1.0
+        assert got.sum() == 100.0
+
+
+class TestIsendIrecv:
+    def test_isend_completes_immediately(self, filectx):
+        req = filectx.isend(1, "t", 123)
+        assert req.test() and req.wait() is None
+
+    def test_irecv_out_of_order_waits(self, filectx):
+        for i in range(3):
+            filectx.send(0, "s", i)
+        r = [filectx.irecv(0, "s") for _ in range(3)]
+        # completing in reverse order must still match FIFO seq slots
+        assert [r[2].wait(5), r[0].wait(5), r[1].wait(5)] == [2, 0, 1]
+
+    def test_irecv_thread(self, threadpair):
+        t0, t1 = threadpair
+        reqs = [t1.irecv(0, "q") for _ in range(2)]
+        assert not reqs[0].test()
+        t0.send(1, "q", "a")
+        t0.send(1, "q", "b")
+        assert reqs[1].wait(5) == "b" and reqs[0].wait(5) == "a"
+
+    def test_wait_all_arrival_order(self, threadpair):
+        t0, t1 = threadpair
+        reqs = [t1.irecv(0, ("k", i)) for i in range(4)]
+        for i in reversed(range(4)):
+            t0.send(1, ("k", i), i * 10)
+        out = CommContext.wait_all(reqs, timeout=5)
+        assert out == [0, 10, 20, 30]
+
+    def test_wait_all_timeout(self, threadpair):
+        _, t1 = threadpair
+        with pytest.raises(StragglerTimeout):
+            CommContext.wait_all([t1.irecv(0, "never")], timeout=0.2)
+
+
+class TestFrameFormat:
+    def test_buffer_free_message_inspectable_with_pickle(self, filectx, tmp_path):
+        """The paper's debugging affordance survives the v2 frame: pickle
+        bytes lead the file, so naive pickle.load works on metadata."""
+        filectx.send(1, "dbg", {"x": 42})
+        bufs = list(Path(tmp_path).glob("m_s0_d1_*.buf"))
+        assert len(bufs) == 1
+        with open(bufs[0], "rb") as f:
+            assert pickle.load(f) == {"x": 42}
+
+    def test_single_file_per_message(self, filectx, tmp_path):
+        filectx.send(1, "one", np.arange(10000.0))
+        assert len(list(Path(tmp_path).glob("m_s0_d1_*"))) == 1
+
+
+class TestChunking:
+    def test_large_payload_chunks_and_reassembles(self, filectx, tmp_path,
+                                                  monkeypatch):
+        monkeypatch.setenv("PPYTHON_MAX_MSG_BYTES", "8192")
+        rng = np.random.default_rng(7)
+        obj = rng.random((100, 100))  # ~80 KB >> 8 KB limit
+        filectx.send(1, "big", obj)
+        files = list(Path(tmp_path).glob("m_s0_d1_*"))
+        assert len(files) > 2  # header + several chunk pieces
+        ctx1 = FileMPI(np_=2, pid=1, comm_dir=tmp_path, heartbeat=False)
+        got = ctx1.recv(0, "big")
+        np.testing.assert_array_equal(got, obj)
+        assert got.tobytes() == obj.tobytes()
+        assert got.flags.writeable  # reassembly must not hand back bytes
+        got += 1.0
+        assert not list(Path(tmp_path).glob("m_s0_d1_*"))  # all claimed
+
+    def test_chunk_straggler_leaves_stream_intact(self, tmp_path, monkeypatch):
+        """A receive timing out mid-chunk must claim nothing: the retry
+        gets the same message once the missing piece lands."""
+        import os
+
+        monkeypatch.setenv("PPYTHON_MAX_MSG_BYTES", "4096")
+        a = FileMPI(np_=2, pid=0, comm_dir=tmp_path, heartbeat=False)
+        b = FileMPI(np_=2, pid=1, comm_dir=tmp_path, heartbeat=False)
+        big = np.arange(5000.0)
+        b.send(0, "x", big)
+        chunk0 = a._msg_path(1, 0, ("__chunk", "x", 0), 0)
+        hidden = chunk0.with_suffix(".hidden")
+        os.rename(chunk0, hidden)  # simulate a sender stalled mid-payload
+        with pytest.raises(StragglerTimeout):
+            a.recv(1, "x", timeout=0.3)
+        os.rename(hidden, chunk0)  # the piece finally arrives
+        np.testing.assert_array_equal(a.recv(1, "x", timeout=5), big)
+        assert not list(Path(tmp_path).glob("m_s1_d0_*"))
+
+    def test_request_test_nonblocking_on_partial_chunks(self, tmp_path,
+                                                        monkeypatch):
+        import os
+        import time
+
+        monkeypatch.setenv("PPYTHON_MAX_MSG_BYTES", "4096")
+        a = FileMPI(np_=2, pid=0, comm_dir=tmp_path, heartbeat=False)
+        b = FileMPI(np_=2, pid=1, comm_dir=tmp_path, heartbeat=False)
+        big = np.arange(5000.0)
+        b.send(0, "y", big)
+        chunk0 = a._msg_path(1, 0, ("__chunk", "y", 0), 0)
+        os.rename(chunk0, chunk0.with_suffix(".hidden"))
+        req = a.irecv(1, "y")
+        t0 = time.monotonic()
+        assert req.test() is False  # header present, chunks incomplete
+        assert time.monotonic() - t0 < 1.0
+        os.rename(chunk0.with_suffix(".hidden"), chunk0)
+        np.testing.assert_array_equal(req.wait(5), big)
+
+    def test_probe_waits_for_all_chunks(self, tmp_path, monkeypatch):
+        """probe()==True must guarantee a non-blocking claim: a chunked
+        message is not 'available' until every piece has landed."""
+        import os
+
+        monkeypatch.setenv("PPYTHON_MAX_MSG_BYTES", "4096")
+        rx = FileMPI(np_=2, pid=0, comm_dir=tmp_path, heartbeat=False)
+        tx = FileMPI(np_=2, pid=1, comm_dir=tmp_path, heartbeat=False)
+        tx.send(0, "p", np.arange(5000.0))
+        c0 = rx._msg_path(1, 0, ("__chunk", "p", 0), 0)
+        os.rename(c0, c0.with_suffix(".hidden"))
+        assert rx.probe(1, "p") is False
+        os.rename(c0.with_suffix(".hidden"), c0)
+        assert rx.probe(1, "p") is True
+        np.testing.assert_array_equal(rx.recv(1, "p"), np.arange(5000.0))
+
+    def test_chunked_then_normal_fifo(self, filectx, monkeypatch):
+        monkeypatch.setenv("PPYTHON_MAX_MSG_BYTES", "4096")
+        filectx.send(0, "mix", np.arange(2000.0))
+        monkeypatch.delenv("PPYTHON_MAX_MSG_BYTES")
+        filectx.send(0, "mix", "after")
+        np.testing.assert_array_equal(filectx.recv(0, "mix"), np.arange(2000.0))
+        assert filectx.recv(0, "mix") == "after"
+
+
+class TestSeqDesyncRegression:
+    """A timed-out recv used to advance the (src, tag) sequence number,
+    permanently desyncing the stream — every later message matched the
+    wrong seq and the rank hung."""
+
+    def test_filempi_recv_retries_same_slot(self, tmp_path):
+        a = FileMPI(np_=2, pid=0, comm_dir=tmp_path, heartbeat=False)
+        b = FileMPI(np_=2, pid=1, comm_dir=tmp_path, heartbeat=False)
+        with pytest.raises(StragglerTimeout):
+            a.recv(1, "late", timeout=0.2)
+        b.send(0, "late", "first")
+        b.send(0, "late", "second")
+        assert a.recv(1, "late", timeout=5) == "first"
+        assert a.recv(1, "late", timeout=5) == "second"
+
+    def test_threadcomm_recv_retries_same_slot(self, threadpair):
+        t0, t1 = threadpair
+        with pytest.raises(StragglerTimeout):
+            t1.recv(0, "late", timeout=0.2)
+        t0.send(1, "late", "first")
+        assert t1.recv(0, "late", timeout=5) == "first"
+
+    def test_probe_unaffected_by_timeout(self, tmp_path):
+        a = FileMPI(np_=2, pid=0, comm_dir=tmp_path, heartbeat=False)
+        b = FileMPI(np_=2, pid=1, comm_dir=tmp_path, heartbeat=False)
+        with pytest.raises(StragglerTimeout):
+            a.recv(1, "p", timeout=0.1)
+        b.send(0, "p", 1)
+        assert a.probe(1, "p")

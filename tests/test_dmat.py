@@ -7,8 +7,7 @@ redistribution is `local values == global ids at local positions`.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 import repro.core as pp
 from repro.comm import run_spmd

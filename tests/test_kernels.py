@@ -5,8 +5,7 @@ import pytest
 
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import (
     attention,

@@ -1,0 +1,260 @@
+"""Redistribution engine v2: plan cache correctness on both transports.
+
+3-D/4-D block <-> cyclic <-> block-cyclic(+overlap) round-trips with the
+``arange_field`` oracle (every element encodes its own global index, so a
+correct redistribution is simply "local values == global ids"), asserting
+the plan-cached and cold paths move identical data across ThreadComm and
+FileMPI.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+import repro.core as pp
+from repro.comm import FileMPI, run_spmd, set_context
+from repro.core import Dmap, clear_plan_cache, plan_cache_stats
+from repro.core.redist import build_plan, get_plan
+
+
+def check_field(a):
+    """An arange_field Dmat must hold exactly its global ids (owned part)."""
+    own = a.local_view_owned()
+    idx = [a.owned_indices(d) for d in range(a.ndim)]
+    if not all(len(i) for i in idx):
+        return
+    grids = np.meshgrid(*idx, indexing="ij")
+    lin = np.zeros_like(grids[0])
+    for d, g in enumerate(grids):
+        lin = lin * a.shape[d] + g
+    np.testing.assert_array_equal(own, lin.astype(a.dtype))
+
+
+def run_filempi_spmd(fn, np_, tmp_path, timeout=120.0):
+    """Run ``fn`` SPMD over FileMPI ranks hosted on threads (one shared
+    message directory, real file transport, no process-launch overhead)."""
+    results = [None] * np_
+    errors = [None] * np_
+
+    def body(pid):
+        ctx = FileMPI(np_=np_, pid=pid, comm_dir=tmp_path, heartbeat=False)
+        set_context(ctx)
+        try:
+            results[pid] = fn()
+        except BaseException as e:  # noqa: BLE001 - surfaced below
+            errors[pid] = e
+        finally:
+            set_context(None)
+
+    threads = [threading.Thread(target=body, args=(pid,)) for pid in range(np_)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout)
+    for e in errors:
+        if e is not None:
+            raise e
+    return results
+
+
+def roundtrip_body(shape, spec_a, spec_b, use_cache):
+    """Field under map A -> redistribute to B -> back to a fresh A-array;
+    both hops must preserve the oracle."""
+    import repro.comm as comm
+
+    world = comm.Np()
+    grid_a, dist_a, overlap_a = spec_a
+    grid_b, dist_b, overlap_b = spec_b
+    map_a = Dmap(grid_a, dist_a, range(world), overlap=overlap_a)
+    map_b = Dmap(grid_b, dist_b, range(world), overlap=overlap_b)
+    from repro.core.redist import redistribute
+
+    x = pp.arange_field(*shape, map=map_a)
+    z = pp.zeros(*shape, map=map_b)
+    redistribute(z, x, use_cache=use_cache)
+    check_field(z)
+    back = pp.zeros(*shape, map=map_a)
+    redistribute(back, z, use_cache=use_cache)
+    check_field(back)
+    return pp.agg(back, root=0)
+
+
+SPECS_3D = [
+    ([4, 1, 1], {}, None),
+    ([1, 2, 2], ["c", "b", "c"], None),
+    ([2, 2, 1], [{"dist": "bc", "size": 2}, "b", "b"], None),
+    ([2, 2, 1], {}, [1, 0, 0]),  # block + overlap halo
+]
+
+SPECS_4D = [
+    ([2, 2, 1, 1], {}, None),
+    ([1, 1, 2, 2], ["b", "b", "c", "b"], None),
+    ([1, 2, 1, 2], [{}, {"dist": "bc", "size": 3}, {}, "c"], None),
+]
+
+
+@pytest.mark.parametrize("transport", ["thread", "filempi"])
+@pytest.mark.parametrize("src", range(len(SPECS_3D)))
+@pytest.mark.parametrize("dst", range(len(SPECS_3D)))
+def test_3d_roundtrip(transport, src, dst, tmp_path):
+    shape = (9, 7, 10)
+    args = (shape, SPECS_3D[src], SPECS_3D[dst], True)
+    if transport == "thread":
+        res = run_spmd(roundtrip_body, 4, args=args)
+    else:
+        res = run_filempi_spmd(lambda: roundtrip_body(*args), 4, tmp_path)
+    want = np.arange(np.prod(shape), dtype=float).reshape(shape)
+    np.testing.assert_array_equal(res[0], want)
+
+
+@pytest.mark.parametrize("transport", ["thread", "filempi"])
+@pytest.mark.parametrize("src", range(len(SPECS_4D)))
+@pytest.mark.parametrize("dst", range(len(SPECS_4D)))
+def test_4d_roundtrip(transport, src, dst, tmp_path):
+    shape = (4, 6, 5, 3)
+    args = (shape, SPECS_4D[src], SPECS_4D[dst], True)
+    if transport == "thread":
+        res = run_spmd(roundtrip_body, 4, args=args)
+    else:
+        res = run_filempi_spmd(lambda: roundtrip_body(*args), 4, tmp_path)
+    want = np.arange(np.prod(shape), dtype=float).reshape(shape)
+    np.testing.assert_array_equal(res[0], want)
+
+
+@pytest.mark.parametrize("transport", ["thread", "filempi"])
+def test_cached_equals_cold(transport, tmp_path):
+    """The memoized plan must move byte-identical data to a cold build."""
+    shape = (11, 13, 6)
+    spec_a = ([4, 1, 1], {}, None)
+    spec_b = ([1, 2, 2], ["b", "c", {"dist": "bc", "size": 2}], None)
+    outs = {}
+    for use_cache in (False, True):
+        args = (shape, spec_a, spec_b, use_cache)
+        if transport == "thread":
+            res = run_spmd(roundtrip_body, 4, args=args)
+        else:
+            sub = tmp_path / f"cache{use_cache}"
+            sub.mkdir()
+            res = run_filempi_spmd(lambda: roundtrip_body(*args), 4, sub)
+        outs[use_cache] = res[0]
+    np.testing.assert_array_equal(outs[False], outs[True])
+
+
+def test_plan_cache_hits_and_stats():
+    clear_plan_cache()
+
+    def body():
+        import repro.comm as comm
+
+        world = comm.Np()
+        src_map = Dmap([world, 1], {}, range(world))
+        dst_map = Dmap([1, world], {}, range(world))
+        x = pp.arange_field(12, 16, map=src_map)
+        z = pp.zeros(12, 16, map=dst_map)
+        for _ in range(10):
+            z[:, :] = x
+        return pp.agg(z, root=0)
+
+    res = run_spmd(body, 4)
+    np.testing.assert_array_equal(
+        res[0], np.arange(12 * 16, dtype=float).reshape(12, 16)
+    )
+    stats = plan_cache_stats()
+    # one miss per rank on the first turn, hits thereafter
+    assert stats["misses"] == 4
+    assert stats["hits"] == 36
+    assert stats["hit_rate"] == pytest.approx(0.9)
+
+
+def test_plan_is_reused_across_dmat_instances():
+    """The plan keys on maps/shapes/region — not array identity."""
+    m_src = Dmap([1, 1], {}, [0])
+    m_dst = Dmap([1, 1], "c", [0])
+    clear_plan_cache()
+    p1 = get_plan(m_src, (6, 6), m_dst, (6, 6), ((0, 6), (0, 6)), 0)
+    p2 = get_plan(m_src, (6, 6), m_dst, (6, 6), ((0, 6), (0, 6)), 0)
+    assert p1 is p2
+    assert plan_cache_stats()["hits"] >= 1
+    # list-valued shapes/regions normalize to the same hashable key
+    p3 = get_plan(m_src, [6, 6], m_dst, (6, 6), [(0, 6), (0, 6)], 0)
+    assert p3 is p1
+
+
+def test_shared_index_arrays_are_frozen():
+    """The owned-index arrays are shared across every Dmat under one
+    (map, shape, rank): in-place mutation must be rejected, not silently
+    corrupt the siblings' index bookkeeping."""
+    m = Dmap([1, 1], {}, [0])
+    a = pp.arange_field(6, 6, map=m)
+    with pytest.raises(ValueError):
+        a.owned_indices(0)[0] = 99
+
+
+def test_stable_tags_across_processes():
+    """FileMPI ranks are separate processes: plan tags must not depend on
+    the per-process hash salt.  build_plan twice must agree, and the tag
+    must be a pure function of the key."""
+    m_src = Dmap([2, 1], {}, [0, 1])
+    m_dst = Dmap([1, 2], "c", [0, 1])
+    a = build_plan(m_src, (8, 8), m_dst, (8, 8), ((0, 8), (0, 8)), 0)
+    b = build_plan(m_src, (8, 8), m_dst, (8, 8), ((0, 8), (0, 8)), 1)
+    assert a.tag == b.tag
+    c = build_plan(m_src, (8, 9), m_dst, (8, 9), ((0, 8), (0, 9)), 0)
+    assert c.tag != a.tag
+
+
+class TestEmptyReductions:
+    """Regression: zero-size arrays used to raise IndexError (vals[0])."""
+
+    def test_sum_identity(self):
+        m = Dmap([1, 1], {}, [0])
+        e = pp.zeros(0, 4, map=m)
+        assert e.sum() == 0.0
+
+    def test_sum_identity_dtype(self):
+        m = Dmap([1, 1], {}, [0])
+        e = pp.zeros(0, 3, map=m, dtype=np.int64)
+        s = e.sum()
+        assert s == 0 and isinstance(s, np.int64)
+
+    def test_max_min_raise_clear_error(self):
+        m = Dmap([1, 1], {}, [0])
+        e = pp.zeros(4, 0, map=m)
+        with pytest.raises(ValueError, match="zero-size"):
+            e.max()
+        with pytest.raises(ValueError, match="zero-size"):
+            e.min()
+
+    def test_agg_sender_mutation_after_return(self):
+        """Regression: agg() must pin its payload — a sender mutating its
+        local part right after agg() returns must not corrupt the root."""
+        import time
+
+        def body():
+            import repro.comm as comm
+
+            m = Dmap([comm.Np(), 1], {}, range(comm.Np()))
+            a = pp.arange_field(8, 4, map=m)
+            if comm.Pid() == 0:
+                time.sleep(0.05)  # let senders post and then mutate first
+                return pp.agg(a)
+            pp.agg(a)
+            a.local[...] = -1.0
+            return None
+
+        for _ in range(5):
+            res = run_spmd(body, 4)
+            np.testing.assert_array_equal(
+                res[0], np.arange(32.0).reshape(8, 4)
+            )
+
+    def test_spmd_empty_sum(self):
+        def body():
+            import repro.comm as comm
+
+            m = Dmap([comm.Np(), 1], {}, range(comm.Np()))
+            e = pp.zeros(0, 5, map=m)
+            return e.sum()
+
+        assert run_spmd(body, 3) == [0.0, 0.0, 0.0]
