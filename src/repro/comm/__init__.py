@@ -9,10 +9,16 @@ Three interchangeable transports behind one interface:
                   codes without process-launch overhead.
 * ``LocalComm`` — Np=1 degenerate context (every op is a no-op/self-copy).
 
+On top of the point-to-point primitives, ``collectives.py`` provides the
+scalable collective algorithms (binomial tree, recursive doubling, ring,
+pairwise exchange, dissemination) with message-size-based selection and
+``Group`` sub-communicators for any rank subset.
+
 This package is intentionally NumPy-only (no JAX import): pRUN workers must
 start fast and run anywhere Python runs.
 """
 
+from .collectives import Group, group_of, world_group
 from .context import (
     CommContext,
     LocalComm,
@@ -20,6 +26,7 @@ from .context import (
     Pid,
     Request,
     StragglerTimeout,
+    ctx_counter,
     get_context,
     init,
     set_context,
@@ -32,8 +39,12 @@ __all__ = [
     "FileMPI",
     "LocalComm",
     "ThreadComm",
+    "Group",
     "Request",
     "StragglerTimeout",
+    "ctx_counter",
+    "group_of",
+    "world_group",
     "run_spmd",
     "get_context",
     "set_context",

@@ -1,0 +1,718 @@
+"""Scalable collective algorithms over any PythonMPI transport.
+
+The paper's derived collectives (``context.py``) were flat O(P) patterns
+rooted at one rank: a serialized linear ``bcast`` fan-out, a central
+gather-and-release ``barrier``, gather-to-0-plus-bcast ``allgather``.
+Those are fine at np=4 and a root bottleneck at np=64 — the HPC Challenge
+results (and the pMatlab lineage this reproduces) hinge on the *library*
+picking communication algorithms, not the user.  This module is that
+layer:
+
+=================  ========================================================
+collective         algorithms (``algo=`` accepts any name; ``None`` = auto)
+=================  ========================================================
+``bcast``          ``tree`` (binomial), ``ring`` (chunked/pipelined, long
+                   ndarrays), ``onefile`` (FileMPI single-payload-file),
+                   ``linear`` (the seed baseline, kept for benchmarking)
+``reduce``         ``tree`` (binomial)
+``gather``         ``flat`` (one isend per child, root completes in
+                   *arrival* order), ``tree`` (binomial, latency-bound
+                   regimes)
+``allgather``      ``rd`` (recursive doubling, power-of-two groups),
+                   ``ring``, ``gatherbcast`` (seed baseline)
+``allreduce``      ``rd`` (recursive doubling with non-power-of-two
+                   folding), ``ring`` (reduce-scatter + allgather, long
+                   ndarrays), ``gather`` (seed allgather-then-reduce
+                   baseline)
+``reduce_scatter`` ``ring``
+``alltoallv``      ``pairwise`` (rotated pairwise exchange)
+``barrier``        ``dissem`` (dissemination), ``central`` (seed baseline)
+=================  ========================================================
+
+Algorithm selection is message-size based: payloads at or below
+``PPYTHON_COLL_EAGER_BYTES`` (default 64 KiB) take the eager
+latency-optimal algorithm; larger ndarrays take the chunked/pipelined
+bandwidth-optimal one.  Selection that depends on payload size only uses
+sizes every participant can see (the root's for ``bcast`` — it ships a
+tiny tree header before a ring transfer — and the local value for
+``allreduce``, whose operands must be congruent across ranks anyway).
+
+``Group`` scopes every collective to an ordered subset of world ranks —
+any ``Dmap.proclist``, including non-contiguous, permuted, and
+non-zero-rooted lists — with tags derived from a per-(group, op) SPMD
+counter, so concurrent collectives on disjoint or identical groups can
+never cross-match message streams.
+
+Buffer semantics: on by-reference transports (ThreadComm) every hop
+copies *mutable* ndarray payloads before posting (``_pin``), so a
+collective's inputs may be mutated the moment it returns and its outputs
+are private to each rank — MPI's contract.  Read-only arrays travel by
+reference; ``bcast`` exploits this with a frozen-buffer fast path (one
+pinning copy at the root, zero-copy fan-out — the in-process analogue of
+FileMPI's one-payload-file broadcast), so non-root ranks receive
+read-only views and must ``.copy()`` before mutating.  Serializing
+transports (FileMPI) pin by construction and pay no extra copy.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from .context import CommContext, _freeze, ctx_counter
+
+__all__ = [
+    "Group",
+    "group_of",
+    "world_group",
+    "eager_bytes",
+    "payload_nbytes",
+    "select_bcast",
+    "select_allreduce",
+    "select_allgather",
+    "select_gather",
+    "DEFAULT_EAGER_BYTES",
+]
+
+DEFAULT_EAGER_BYTES = 64 * 1024
+
+# chunked-ring transfers pipeline at this many pieces at most; enough to
+# hide the (P-2)-hop ring fill at any realistic payload size
+_MAX_RING_CHUNKS = 32
+
+
+def eager_bytes() -> int:
+    """Eager/rendezvous switch point (``PPYTHON_COLL_EAGER_BYTES``)."""
+    raw = os.environ.get("PPYTHON_COLL_EAGER_BYTES", "")
+    return int(raw) if raw else DEFAULT_EAGER_BYTES
+
+
+def payload_nbytes(obj: Any) -> int:
+    """Bytes that matter for algorithm selection (0 for non-arrays:
+    objects are pickled small things and always go eager)."""
+    return obj.nbytes if isinstance(obj, np.ndarray) else 0
+
+
+# ---------------------------------------------------------------------------
+# Pure selection functions (unit-testable; the --smoke bench asserts them)
+# ---------------------------------------------------------------------------
+
+
+def select_bcast(nbytes: int, size: int, onefile: bool = False) -> str:
+    """Bcast policy for *serializing* transports.  Both shipped transports
+    override it in practice: FileMPI takes the one-file path, and on
+    by-reference transports ``Group.bcast`` prefers the frozen-buffer
+    tree (one pinned copy, zero-copy fan-out) for ndarrays at every size
+    — the chunked ring stays available via ``algo='ring'`` and is the
+    auto policy for a future serializing transport without a one-file
+    hook (e.g. sockets)."""
+    if onefile:
+        # one payload file + N in-place readers beats any message tree on a
+        # shared filesystem (MatlabMPI's trick)
+        return "onefile"
+    if size <= 2 or nbytes <= eager_bytes():
+        return "tree"
+    return "ring"
+
+
+def select_allreduce(nbytes: int, size: int) -> str:
+    # the ring needs nbytes to be a real ndarray payload worth chunking
+    if size <= 2 or nbytes <= eager_bytes():
+        return "rd"
+    return "ring"
+
+
+def select_allgather(size: int) -> str:
+    # per-rank contributions may differ in size, so selection must not
+    # depend on the local payload; power-of-two groups take log-step
+    # recursive doubling, the rest the size-agnostic ring
+    return "rd" if size & (size - 1) == 0 else "ring"
+
+
+def select_gather(size: int) -> str:
+    # flat arrival-order completion moves each payload once (bandwidth
+    # optimal); the binomial tree only wins on latency at larger fan-in
+    return "tree" if size >= 16 else "flat"
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+
+def _group_token(ranks: tuple[int, ...]) -> str:
+    """Short stable token naming a rank set (tag component)."""
+    if ranks == tuple(range(len(ranks))):
+        return f"w{len(ranks)}"
+    return hashlib.sha1(repr(ranks).encode()).hexdigest()[:10]
+
+
+def _is_frozen(arr: np.ndarray) -> bool:
+    """Safely immutable: read-only AND owns its buffer.  A read-only
+    *view* of a writeable base can still be mutated through the base, so
+    only owning arrays qualify for by-reference travel."""
+    return (not arr.flags.writeable) and arr.base is None and arr.flags.owndata
+
+
+def _frozen_owned(arr: np.ndarray) -> np.ndarray:
+    """``arr`` if already safely immutable, else a read-only owning copy."""
+    if not _is_frozen(arr):
+        arr = arr.copy()
+        arr.setflags(write=False)
+    return arr
+
+
+def _pin(ctx: CommContext, obj: Any) -> Any:
+    """Copy array payloads on by-reference transports so the sender may
+    mutate its buffer immediately and no two ranks ever alias one
+    *mutable* array.  Safely immutable arrays (see ``_is_frozen``) travel
+    by reference — the zero-copy fast path frozen-buffer broadcast rides
+    on."""
+    if not getattr(ctx, "payload_by_reference", False):
+        return obj
+    if isinstance(obj, np.ndarray):
+        return obj if _is_frozen(obj) else obj.copy()
+    if isinstance(obj, tuple):
+        pinned = [_pin(ctx, o) for o in obj]
+        # namedtuples reconstruct via _make; plain tuples (and subclasses
+        # without it) via tuple() — type(obj)(generator) would TypeError
+        # on namedtuple's positional constructor
+        return obj._make(pinned) if hasattr(obj, "_make") else tuple(pinned)
+    if isinstance(obj, list):
+        return [_pin(ctx, o) for o in obj]
+    if isinstance(obj, dict):
+        return {k: _pin(ctx, v) for k, v in obj.items()}
+    return obj
+
+
+def _combine(op: Callable, a: Any, b: Any) -> Any:
+    """None-aware reduction step (ranks with empty local parts contribute
+    ``None``, e.g. zero-size Dmat reductions)."""
+    if a is None:
+        return b
+    if b is None:
+        return a
+    return op(a, b)
+
+
+class Group:
+    """Ordered subset of a context's ranks with its own collective scope.
+
+    ``ranks`` may be any duplicate-free world-pid sequence — the order
+    defines group ranks (``self.rank``), so a permuted ``Dmap.proclist``
+    keeps its meaning.  Only members may invoke collectives.  Tags derive
+    from a per-(group, op) counter that every member advances in the same
+    SPMD order, so interleaved collectives — even on the *same* group —
+    can never cross-match, and two groups never share a tag space.
+    """
+
+    def __init__(self, ctx: CommContext, ranks: Sequence[int]):
+        ranks = tuple(int(r) for r in ranks)
+        if not ranks:
+            raise ValueError("a Group needs at least one rank")
+        if len(set(ranks)) != len(ranks):
+            raise ValueError(f"group ranks contain duplicates: {ranks}")
+        for r in ranks:
+            if not (0 <= r < ctx.np_):
+                raise ValueError(f"rank {r} out of range for np={ctx.np_}")
+        self.ctx = ctx
+        self.ranks = ranks
+        self.size = len(ranks)
+        self.rank = ranks.index(ctx.pid) if ctx.pid in ranks else None
+        self.key = _group_token(ranks)
+
+    def __repr__(self) -> str:
+        return f"Group(ranks={list(self.ranks)}, rank={self.rank})"
+
+    # -- plumbing ----------------------------------------------------------
+
+    def _require_member(self) -> int:
+        if self.rank is None:
+            raise ValueError(
+                f"rank {self.ctx.pid} is not a member of group {self.ranks}"
+            )
+        return self.rank
+
+    def _root_rank(self, root: int | None) -> int:
+        """Group rank of a world-pid root (default: first group member)."""
+        root = self.ranks[0] if root is None else int(root)
+        try:
+            return self.ranks.index(root)
+        except ValueError:
+            raise ValueError(f"root {root} is not in group {self.ranks}") from None
+
+    def _base_tag(self, op: str, tag: Any):
+        if tag is not None:
+            return ("__coll", self.key, op, "u", _freeze(tag))
+        return ("__coll", self.key, op,
+                ctx_counter(self.ctx, ("__coll", self.key, op)))
+
+    def _send(self, dst: int, tag: Any, obj: Any) -> None:
+        self.ctx.isend(self.ranks[dst], tag, _pin(self.ctx, obj))
+
+    def _freeze_hop(self, obj: Any) -> Any:
+        """Freeze a *received* block in place before forwarding it on, so
+        ring laps circulate references instead of per-hop copies.  Safe
+        because a received block on a by-reference transport is already
+        this rank's private owned copy (the sender pinned it)."""
+        if (getattr(self.ctx, "payload_by_reference", False)
+                and isinstance(obj, np.ndarray)
+                and obj.base is None and obj.flags.owndata):
+            obj.setflags(write=False)
+        return obj
+
+    def _recv(self, src: int, tag: Any) -> Any:
+        return self.ctx.recv(self.ranks[src], tag)
+
+    def _irecv(self, src: int, tag: Any):
+        return self.ctx.irecv(self.ranks[src], tag)
+
+    # -- broadcast ---------------------------------------------------------
+
+    def bcast(self, obj: Any = None, root: int | None = None, tag: Any = None,
+              algo: str | None = None) -> Any:
+        me = self._require_member()
+        rootg = self._root_rank(root)
+        if self.size == 1:
+            return obj
+        base = self._base_tag("bc", tag)
+        if algo is None and hasattr(self.ctx, "onefile_bcast"):
+            algo = "onefile"
+        if algo == "onefile":
+            return self.ctx.onefile_bcast(self.ranks[rootg], obj, base, self.ranks)
+        if algo == "linear":
+            return self._bcast_linear(obj, rootg, base)
+        # the root picks eager-tree vs chunked-ring from the payload it
+        # alone can see; with the ring, a tiny tree-broadcast header tells
+        # everyone the transfer shape first (log-P small messages)
+        if me == rootg:
+            byref = getattr(self.ctx, "payload_by_reference", False)
+            if algo is None:
+                # in-process, a broadcast is one immutable buffer read by
+                # everyone (the ThreadComm analogue of FileMPI's one-file
+                # trick): frozen-tree beats the chunked ring at every size
+                if byref and isinstance(obj, np.ndarray):
+                    algo = "tree"
+                else:
+                    algo = select_bcast(payload_nbytes(obj), self.size)
+            if algo == "tree":
+                if byref and isinstance(obj, np.ndarray):
+                    # ONE pinning copy at the root; the frozen buffer then
+                    # travels by reference (receivers get read-only views
+                    # — .copy() to own).  Already-frozen inputs travel
+                    # with zero copies.
+                    self._bcast_tree(("e", _frozen_owned(obj)), rootg, base)
+                    return obj
+                return self._bcast_tree(("e", obj), rootg, base)[1]
+            if not isinstance(obj, np.ndarray):
+                raise ValueError("ring bcast requires an ndarray payload")
+            arr = np.asarray(obj)
+            nchunks = self._ring_chunks(arr.nbytes)
+            self._bcast_tree(("r", nchunks, arr.shape, arr.dtype), rootg, base)
+            return self._bcast_ring(arr, rootg, base, nchunks)
+        head = self._bcast_tree(None, rootg, base)
+        if head[0] == "e":
+            return head[1]
+        _, nchunks, shape, dtype = head
+        flat = self._bcast_ring(None, rootg, base, nchunks)
+        return flat.reshape(shape).astype(dtype, copy=False)
+
+    def _bcast_linear(self, obj: Any, rootg: int, base) -> Any:
+        """The seed algorithm: serialized fan-out from the root (O(P) at
+        the root).  Kept as the benchmark baseline."""
+        if self.rank == rootg:
+            for dst in range(self.size):
+                if dst != rootg:
+                    self._send(dst, (base, "lin"), obj)
+            return obj
+        return self._recv(rootg, (base, "lin"))
+
+    def _bcast_tree(self, obj: Any, rootg: int, base) -> Any:
+        """Binomial tree rooted at group rank ``rootg``: ceil(log2 P)
+        rounds, every rank forwards to at most log P children."""
+        rel = (self.rank - rootg) % self.size
+        mask = 1
+        while mask < self.size:
+            if rel & mask:
+                obj = self._recv((rel - mask + rootg) % self.size, (base, "t"))
+                break
+            mask <<= 1
+        mask >>= 1
+        while mask:
+            if rel + mask < self.size:
+                self._send((rel + mask + rootg) % self.size, (base, "t"), obj)
+            mask >>= 1
+        return obj
+
+    @staticmethod
+    def _ring_chunks(nbytes: int) -> int:
+        chunk = max(eager_bytes(), 1)
+        return max(1, min(_MAX_RING_CHUNKS, -(-nbytes // chunk)))
+
+    def _bcast_ring(self, arr: np.ndarray | None, rootg: int, base,
+                    nchunks: int) -> np.ndarray:
+        """Pipelined chain in relative-rank order: the root streams chunks
+        to its successor; every rank forwards each chunk as it lands, so
+        steady state moves the whole payload once per rank, overlapped."""
+        rel = (self.rank - rootg) % self.size
+        nxt = (rel + 1 + rootg) % self.size
+        if rel == 0:
+            flat = np.ascontiguousarray(arr).reshape(-1)
+            for i, piece in enumerate(np.array_split(flat, nchunks)):
+                self._send(nxt, (base, "c", i), piece)
+            return arr
+        pieces = []
+        for i in range(nchunks):
+            piece = self._freeze_hop(
+                self._recv((rel - 1 + rootg) % self.size, (base, "c", i))
+            )
+            if rel + 1 < self.size:
+                self._send(nxt, (base, "c", i), piece)
+            pieces.append(piece)
+        return np.concatenate(pieces)
+
+    # -- reduce ------------------------------------------------------------
+
+    def reduce(self, value: Any, op: Callable, root: int | None = None,
+               tag: Any = None) -> Any:
+        """Binomial-tree reduction to ``root`` (commutative ``op``); the
+        root returns the reduced value, everyone else ``None``."""
+        self._require_member()
+        rootg = self._root_rank(root)
+        if self.size == 1:
+            return value
+        base = self._base_tag("red", tag)
+        rel = (self.rank - rootg) % self.size
+        acc = value
+        mask = 1
+        while mask < self.size:
+            if rel & mask:
+                self._send((rel - mask + rootg) % self.size, (base, "r"), acc)
+                return None
+            partner = rel | mask
+            if partner < self.size:
+                other = self._recv((partner + rootg) % self.size, (base, "r"))
+                acc = _combine(op, acc, other)
+            mask <<= 1
+        return acc
+
+    # -- gather ------------------------------------------------------------
+
+    def gather(self, obj: Any, root: int | None = None, tag: Any = None,
+               algo: str | None = None) -> list | None:
+        me = self._require_member()
+        rootg = self._root_rank(root)
+        if self.size == 1:
+            return [obj]
+        base = self._base_tag("ga", tag)
+        if algo is None:
+            algo = select_gather(self.size)
+        if algo == "tree":
+            return self._gather_tree(obj, rootg, base)
+        # flat: one isend per child, the root completes receives in
+        # *arrival* order — one slow rank never serializes the others
+        if me != rootg:
+            self._send(rootg, (base, "f", me), obj)
+            return None
+        parts: list[Any] = [None] * self.size
+        parts[rootg] = obj
+        others = [g for g in range(self.size) if g != rootg]
+        reqs = [self._irecv(src, (base, "f", src)) for src in others]
+        for src, val in zip(others, self.ctx.wait_all(reqs)):
+            parts[src] = val
+        return parts
+
+    def _gather_tree(self, obj: Any, rootg: int, base) -> list | None:
+        rel = (self.rank - rootg) % self.size
+        acc = {self.rank: obj}
+        mask = 1
+        while mask < self.size:
+            if rel & mask:
+                self._send((rel - mask + rootg) % self.size, (base, "t"), acc)
+                return None
+            partner = rel | mask
+            if partner < self.size:
+                acc.update(self._recv((partner + rootg) % self.size, (base, "t")))
+            mask <<= 1
+        return [acc[g] for g in range(self.size)]
+
+    # -- allgather ---------------------------------------------------------
+
+    def allgather(self, obj: Any, tag: Any = None,
+                  algo: str | None = None) -> list:
+        me = self._require_member()
+        if self.size == 1:
+            return [obj]
+        base = self._base_tag("ag", tag)
+        if algo is None:
+            algo = select_allgather(self.size)
+        if algo == "gatherbcast":
+            # seed baseline: gather to group rank 0, then broadcast the
+            # whole assembled list — O(P·S) through one root
+            parts = self.gather(obj, root=self.ranks[0], tag=(base, "g"))
+            return self.bcast(parts, root=self.ranks[0], tag=(base, "b"),
+                              algo="linear")
+        if algo == "rd":
+            if self.size & (self.size - 1):
+                raise ValueError(
+                    "recursive-doubling allgather needs a power-of-two "
+                    f"group (size {self.size}); use algo='ring'"
+                )
+            acc = {me: obj}
+            mask = 1
+            while mask < self.size:
+                partner = me ^ mask
+                self._send(partner, (base, "rd", mask), acc)
+                acc.update(self._recv(partner, (base, "rd", mask)))
+                mask <<= 1
+            return [acc[g] for g in range(self.size)]
+        # ring: P-1 steps, each rank forwards the newest block to its
+        # successor — works for any group size.  Received blocks are
+        # frozen so forwarding travels by reference: on by-reference
+        # transports the returned entries (except this rank's own) are
+        # read-only — .copy() to own.
+        parts: list[Any] = [None] * self.size
+        parts[me] = obj
+        right, left = (me + 1) % self.size, (me - 1) % self.size
+        for step in range(self.size - 1):
+            si = (me - step) % self.size
+            ri = (me - 1 - step) % self.size
+            self._send(right, (base, "rg", step), parts[si])
+            parts[ri] = self._freeze_hop(self._recv(left, (base, "rg", step)))
+        return parts
+
+    # -- allreduce ---------------------------------------------------------
+
+    def allreduce(self, value: Any, op: Callable, tag: Any = None,
+                  algo: str | None = None) -> Any:
+        """Reduce ``value`` with commutative ``op`` and deliver the result
+        to every member.  Long ndarray payloads take the bandwidth-optimal
+        ring (``op`` must then be elementwise, e.g. ``np.add``); everything
+        else recursive doubling."""
+        me = self._require_member()
+        if self.size == 1:
+            return value
+        base = self._base_tag("ar", tag)
+        shape = None
+        if algo is None:
+            # contributions may be None or ragged (empty Dmat parts), so a
+            # locally-selected algorithm could differ across ranks and
+            # deadlock; the group leader decides from its own payload and
+            # ships the choice — plus the output shape the ring needs —
+            # down a tiny tree header
+            if me == 0:
+                algo = select_allreduce(payload_nbytes(value), self.size)
+                head = ((algo, value.shape, value.dtype) if algo == "ring"
+                        else (algo,))
+            else:
+                head = None
+            head = self._bcast_tree(head, 0, (base, "alg"))
+            algo = head[0]
+            if algo == "ring":
+                shape = head[1]
+        if algo == "gather":
+            # seed baseline: allgather every contribution, reduce
+            # redundantly on all P ranks
+            vals = [v for v in self.allgather(value, tag=(base, "g"),
+                                              algo="gatherbcast")
+                    if v is not None]
+            if not vals:
+                return None
+            acc = vals[0]
+            for v in vals[1:]:
+                acc = op(acc, v)
+            return acc
+        if algo == "ring":
+            if value is None and shape is None:
+                # only auto mode ships the leader's shape header, so a
+                # forced ring cannot reconstruct this rank's output shape
+                raise ValueError(
+                    "algo='ring' allreduce needs an ndarray contribution "
+                    "on every rank; use auto mode for None contributions"
+                )
+            return self._allreduce_ring(value, op, base, shape=shape)
+        return self._allreduce_rd(value, op, base)
+
+    def _allreduce_rd(self, value: Any, op: Callable, base) -> Any:
+        """Recursive doubling with the standard non-power-of-two folding:
+        the first 2·rem ranks pair-fold down to a power-of-two active set,
+        exchange log2 rounds, then unfold."""
+        me = self.rank
+        pof2 = 1
+        while pof2 * 2 <= self.size:
+            pof2 *= 2
+        rem = self.size - pof2
+        if me < 2 * rem:
+            if me % 2 == 0:
+                self._send(me + 1, (base, "fold"), value)
+                newrank = -1
+            else:
+                value = _combine(op, self._recv(me - 1, (base, "fold")), value)
+                newrank = me // 2
+        else:
+            newrank = me - rem
+        if newrank != -1:
+            mask = 1
+            while mask < pof2:
+                pn = newrank ^ mask
+                partner = pn * 2 + 1 if pn < rem else pn + rem
+                self._send(partner, (base, "x", mask), value)
+                other = self._recv(partner, (base, "x", mask))
+                # rank-ordered operands: both partners compute the same
+                # grouping, so every rank ends bitwise identical
+                if partner < me:
+                    value = _combine(op, other, value)
+                else:
+                    value = _combine(op, value, other)
+                mask <<= 1
+        if me < 2 * rem:
+            if me % 2:
+                self._send(me - 1, (base, "unfold"), value)
+            else:
+                value = self._recv(me + 1, (base, "unfold"))
+        return value
+
+    def _allreduce_ring(self, arr, op: Callable, base,
+                        shape=None) -> np.ndarray:
+        """Ring reduce-scatter + ring allgather: 2·(P-1)/P of the payload
+        through every rank regardless of P (vs. the seed baseline's P·S
+        through the root and (P-1)·S reduced on every rank).
+
+        A rank may contribute ``None`` (empty Dmat part): it circulates
+        None chunks — skipped by the combine step — and reshapes via the
+        leader-shipped ``shape``.  (Auto mode only selects the ring when
+        the *leader* holds an array, so every chunk resolves.)"""
+        if arr is None:
+            chunks: list = [None] * self.size
+        else:
+            arr = np.asarray(arr)
+            shape = arr.shape
+            flat = arr.reshape(-1)
+            chunks = list(np.array_split(flat, self.size))
+        chunks = self._ring_reduce_scatter(chunks, op, base)
+        if (getattr(self.ctx, "payload_by_reference", False)
+                and chunks[self.rank] is not None):
+            # my reduced chunk is final — freeze it so the allgather lap
+            # circulates references, not per-hop copies
+            chunks[self.rank] = _frozen_owned(np.asarray(chunks[self.rank]))
+        chunks = self._ring_allgather_chunks(chunks, base)
+        out = np.concatenate(chunks)
+        return out if shape is None else out.reshape(shape)
+
+    def _ring_reduce_scatter(self, chunks: list, op: Callable, base) -> list:
+        """P-1 ring steps; afterwards ``chunks[self.rank]`` holds the fully
+        reduced chunk for this rank."""
+        me = self.rank
+        right, left = (me + 1) % self.size, (me - 1) % self.size
+        for step in range(self.size - 1):
+            si = (me - 1 - step) % self.size
+            ri = (me - 2 - step) % self.size
+            self._send(right, (base, "rs", step), chunks[si])
+            chunks[ri] = _combine(op, chunks[ri],
+                                  self._recv(left, (base, "rs", step)))
+        return chunks
+
+    def _ring_allgather_chunks(self, chunks: list, base) -> list:
+        me = self.rank
+        right, left = (me + 1) % self.size, (me - 1) % self.size
+        for step in range(self.size - 1):
+            si = (me - step) % self.size
+            ri = (me - 1 - step) % self.size
+            self._send(right, (base, "rag", step), chunks[si])
+            chunks[ri] = self._freeze_hop(self._recv(left, (base, "rag", step)))
+        return chunks
+
+    # -- reduce_scatter ----------------------------------------------------
+
+    def reduce_scatter(self, value: np.ndarray, op: Callable,
+                       tag: Any = None) -> np.ndarray:
+        """Elementwise-reduce ``value`` across the group and return this
+        rank's chunk (``np.array_split`` of the flattened result)."""
+        self._require_member()
+        arr = np.asarray(value)
+        if self.size == 1:
+            return arr.reshape(-1)
+        base = self._base_tag("rs", tag)
+        chunks = list(np.array_split(arr.reshape(-1), self.size))
+        return self._ring_reduce_scatter(chunks, op, base)[self.rank]
+
+    # -- alltoallv ---------------------------------------------------------
+
+    def alltoallv(self, sendlist: Sequence[Any], tag: Any = None) -> list:
+        """Personalized exchange: ``sendlist[g]`` goes to group rank ``g``;
+        returns the payloads received, indexed by source group rank.
+        Rotated pairwise schedule (step s pairs rank r with r±s), receives
+        completed in arrival order."""
+        me = self._require_member()
+        if len(sendlist) != self.size:
+            raise ValueError(
+                f"alltoallv needs one payload per member "
+                f"({len(sendlist)} != {self.size})"
+            )
+        out: list[Any] = [None] * self.size
+        out[me] = _pin(self.ctx, sendlist[me])
+        if self.size == 1:
+            return out
+        base = self._base_tag("a2a", tag)
+        sources, reqs = [], []
+        for step in range(1, self.size):
+            dst = (me + step) % self.size
+            src = (me - step) % self.size
+            self._send(dst, (base, "p"), sendlist[dst])
+            sources.append(src)
+            reqs.append(self._irecv(src, (base, "p")))
+        for src, val in zip(sources, self.ctx.wait_all(reqs)):
+            out[src] = val
+        return out
+
+    # -- barrier -----------------------------------------------------------
+
+    def barrier(self, tag: Any = None, algo: str | None = None) -> None:
+        """Dissemination barrier: ceil(log2 P) rounds, no root.  The seed
+        ``central`` gather-and-release survives as the benchmark baseline."""
+        me = self._require_member()
+        if self.size == 1:
+            return
+        base = self._base_tag("bar", tag)
+        if algo == "central":
+            if me == 0:
+                for src in range(1, self.size):
+                    self._recv(src, (base, "in"))
+                for dst in range(1, self.size):
+                    self._send(dst, (base, "out"), None)
+            else:
+                self._send(0, (base, "in"), None)
+                self._recv(0, (base, "out"))
+            return
+        dist, k = 1, 0
+        while dist < self.size:
+            self._send((me + dist) % self.size, (base, k), None)
+            self._recv((me - dist) % self.size, (base, k))
+            dist <<= 1
+            k += 1
+
+
+# ---------------------------------------------------------------------------
+# Group construction / caching
+# ---------------------------------------------------------------------------
+
+
+def group_of(ctx: CommContext, ranks: Sequence[int]) -> Group:
+    """Memoized ``Group`` for a rank tuple (per-context cache, so repeated
+    collectives on one Dmap reuse the group and its tag counters)."""
+    key = tuple(int(r) for r in ranks)
+    cache = getattr(ctx, "_pp_groups", None)
+    if cache is None:
+        cache = ctx._pp_groups = {}
+    g = cache.get(key)
+    if g is None:
+        g = cache[key] = Group(ctx, key)
+    return g
+
+
+def world_group(ctx: CommContext) -> Group:
+    """The group of every rank in ``ctx`` (MPI_COMM_WORLD)."""
+    return group_of(ctx, range(ctx.np_))

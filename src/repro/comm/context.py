@@ -1,9 +1,31 @@
 """Communication context: the MPI subset pPython needs (paper §III.D).
 
-``MPI_Init / MPI_Comm_size / MPI_Comm_rank / MPI_Send / MPI_Recv /
-MPI_Bcast / MPI_Finalize`` map onto ``init / .np / .pid / .send / .recv /
-.bcast / .finalize``.  A module-level active context gives pPython programs
-the paper's ``pPython.Np`` / ``pPython.Pid`` view of the world.
+======================  ====================================================
+MPI                     pPython
+======================  ====================================================
+MPI_Init                ``init()``
+MPI_Comm_size / _rank   ``.np_`` / ``.pid``
+MPI_Send / MPI_Recv     ``.send`` / ``.recv`` (plus ``isend``/``irecv``/
+                        ``wait_all`` non-blocking requests)
+MPI_Bcast               ``.bcast``      — binomial tree / chunked ring /
+                                          one-file (``collectives.py``)
+MPI_Barrier             ``.barrier``    — dissemination
+MPI_Gather              ``.gather``     — arrival-order flat / binomial
+MPI_Allgather           ``.allgather``  — recursive doubling / ring
+MPI_Allreduce           ``Group.allreduce`` — recursive doubling / ring
+MPI_Reduce              ``Group.reduce``    — binomial tree
+MPI_Reduce_scatter      ``Group.reduce_scatter`` — ring
+MPI_Alltoallv           ``Group.alltoallv``      — pairwise exchange
+MPI_Comm_create_group   ``collectives.group_of(ctx, ranks)``
+MPI_Finalize            ``.finalize()``
+======================  ====================================================
+
+The derived collectives on ``CommContext`` are thin delegations to the
+algorithm layer in ``collectives.py``, which picks tree/ring/recursive-
+doubling variants by message size (``PPYTHON_COLL_EAGER_BYTES``) and
+scopes any rank subset through ``Group``.  A module-level active context
+gives pPython programs the paper's ``pPython.Np`` / ``pPython.Pid`` view
+of the world.
 """
 
 from __future__ import annotations
@@ -20,6 +42,7 @@ __all__ = [
     "SendRequest",
     "RecvRequest",
     "StragglerTimeout",
+    "ctx_counter",
     "get_context",
     "set_context",
     "init",
@@ -27,9 +50,31 @@ __all__ = [
     "Pid",
 ]
 
-BARRIER_TAG = "__pp_barrier"
-AGG_TAG = "__pp_agg"
 DEFAULT_RECV_TIMEOUT = float(os.environ.get("PPYTHON_RECV_TIMEOUT", "300"))
+
+
+CTX_COUNTER_WINDOW = 1024
+
+
+def ctx_counter(ctx: "CommContext", name) -> int:
+    """SPMD-aligned per-context counter: all ranks run the same program,
+    so the Nth call under one ``name`` returns N everywhere — the basis
+    for collision-free collective/synch/agg message tags.
+
+    Wraps at ``CTX_COUNTER_WINDOW`` so long-running iterative programs
+    mint a bounded tag set (transports keep one FIFO seq slot per
+    (peer, tag) stream forever; unbounded tags would leak that table).
+    Reuse is safe: per-stream FIFO sequencing matches repeats in program
+    order, so the window only has to exceed the number of *concurrently
+    in-flight* operations per name — and every collective completes
+    before its caller returns."""
+    counters = getattr(ctx, "_pp_counters", None)
+    if counters is None:
+        counters = {}
+        ctx._pp_counters = counters
+    val = counters.get(name, 0)
+    counters[name] = (val + 1) % CTX_COUNTER_WINDOW
+    return val
 
 
 class StragglerTimeout(RuntimeError):
@@ -164,46 +209,35 @@ class CommContext:
         return out
 
     # -- derived collectives --------------------------------------------------
+    #
+    # Thin delegations to the algorithm layer (collectives.py), which
+    # picks tree/ring/recursive-doubling variants by message size.  The
+    # import is deferred: collectives imports this module.
 
-    def bcast(self, root: int, obj: Any = None, tag: Any = "__pp_bcast") -> Any:
+    def _world(self):
+        from .collectives import world_group
+
+        return world_group(self)
+
+    def bcast(self, root: int, obj: Any = None, tag: Any = None) -> Any:
         if self.np_ == 1:
             return obj
-        if self.pid == root:
-            for dst in range(self.np_):
-                if dst != root:
-                    self.send(dst, tag, obj)
-            return obj
-        return self.recv(root, tag)
+        return self._world().bcast(obj, root=root, tag=tag)
 
-    def barrier(self, tag: Any = BARRIER_TAG) -> None:
-        """Dissemination-free central barrier (gather to 0, release)."""
+    def barrier(self, tag: Any = None) -> None:
         if self.np_ == 1:
             return
-        if self.pid == 0:
-            for src in range(1, self.np_):
-                self.recv(src, (tag, "in"))
-            for dst in range(1, self.np_):
-                self.send(dst, (tag, "out"), None)
-        else:
-            self.send(0, (tag, "in"), None)
-            self.recv(0, (tag, "out"))
+        self._world().barrier(tag=tag)
 
-    def gather(self, root: int, obj: Any, tag: Any = AGG_TAG) -> list | None:
+    def gather(self, root: int, obj: Any, tag: Any = None) -> list | None:
         if self.np_ == 1:
             return [obj]
-        if self.pid == root:
-            parts: list[Any] = [None] * self.np_
-            parts[root] = obj
-            for src in range(self.np_):
-                if src != root:
-                    parts[src] = self.recv(src, (tag, src))
-            return parts
-        self.send(root, (tag, self.pid), obj)
-        return None
+        return self._world().gather(obj, root=root, tag=tag)
 
-    def allgather(self, obj: Any, tag: Any = "__pp_allgather") -> list:
-        parts = self.gather(0, obj, tag=(tag, "g"))
-        return self.bcast(0, parts, tag=(tag, "b"))
+    def allgather(self, obj: Any, tag: Any = None) -> list:
+        if self.np_ == 1:
+            return [obj]
+        return self._world().allgather(obj, tag=tag)
 
     # -- identity ---------------------------------------------------------------
 

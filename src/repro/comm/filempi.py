@@ -356,11 +356,17 @@ class FileMPI(CommContext):
 
     # -- broadcast: single payload file, reference-counted --------------------
 
-    def bcast(self, root: int, obj: Any = None, tag: Any = "__pp_bcast") -> Any:
+    def onefile_bcast(self, root: int, obj: Any, tag: Any, ranks) -> Any:
         """One-file broadcast: the payload is written once and every receiver
         reads it in place (MatlabMPI's trick); receivers drop a done-marker
-        and the last one reclaims the payload."""
-        if self.np_ == 1:
+        and the last one reclaims the payload.
+
+        ``ranks`` is the participating world-pid set — the collectives
+        layer routes any ``Group.bcast`` here (the transport hook the
+        algorithm selector prefers on FileMPI), so reclaim counts group
+        readers, not world size."""
+        ranks = tuple(ranks)
+        if len(ranks) == 1:
             return obj
         key = ("__bc", _tag_token(tag))
         seq = self._send_seq.get(key, 0)
@@ -383,7 +389,7 @@ class FileMPI(CommContext):
         done.touch()
         # last reader reclaims payload + markers (best-effort)
         markers = list(self.dir.glob(payload.stem + ".done*"))
-        if len(markers) >= self.np_ - 1:
+        if len(markers) >= len(ranks) - 1:
             for m in markers + [payload]:
                 try:
                     os.unlink(m)

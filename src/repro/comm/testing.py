@@ -1,0 +1,57 @@
+"""SPMD harness helpers for tests and benchmarks.
+
+``run_filempi_spmd`` mirrors ``threadcomm.run_spmd`` but hosts each rank's
+``FileMPI`` context on a thread over one shared message directory — the
+real file transport without process-launch overhead.  Used by the test
+suite and the collective/redistribution benchmarks; kept in the package
+(not ``tests/``) so both can import one copy.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable
+
+from .context import set_context
+from .filempi import FileMPI
+
+__all__ = ["run_filempi_spmd"]
+
+
+def run_filempi_spmd(
+    fn: Callable[..., Any],
+    np_: int,
+    comm_dir,
+    args: tuple = (),
+    timeout: float = 120.0,
+) -> list[Any]:
+    """Run ``fn(*args)`` as an SPMD body on ``np_`` FileMPI thread-ranks.
+
+    Results are rank-ordered; the first rank exception is re-raised in
+    the caller.  Heartbeats are off (single process — liveness is the
+    thread's)."""
+    results: list[Any] = [None] * np_
+    errors: list[BaseException | None] = [None] * np_
+
+    def body(pid: int) -> None:
+        ctx = FileMPI(np_=np_, pid=pid, comm_dir=comm_dir, heartbeat=False)
+        set_context(ctx)
+        try:
+            results[pid] = fn(*args)
+        except BaseException as e:  # noqa: BLE001 - surfaced to caller
+            errors[pid] = e
+        finally:
+            set_context(None)
+
+    threads = [threading.Thread(target=body, args=(pid,)) for pid in range(np_)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout)
+    for t in threads:
+        if t.is_alive():
+            raise RuntimeError("FileMPI SPMD body did not finish in time")
+    for e in errors:
+        if e is not None:
+            raise e
+    return results

@@ -19,6 +19,7 @@ from .context import (
     CommContext,
     Request,
     StragglerTimeout,
+    _freeze,
     set_context,
 )
 
@@ -28,28 +29,51 @@ _MISSING = object()
 
 
 class ThreadWorld:
-    """Shared mailbox fabric for one SPMD execution."""
+    """Shared mailbox fabric for one SPMD execution.
+
+    Wakeups are *targeted*: each (src, dst, tag, seq) key has at most one
+    receiver (seq slots are reserved per receive), so a blocked ``take``
+    parks on a per-key ``Event`` and ``post`` wakes exactly that thread.
+    The broadcast ``notify_all`` this replaces woke every rank on every
+    message — an O(P) thundering herd per post that dominated collective
+    latency once np outgrew the core count."""
 
     def __init__(self, np_: int):
         self.np_ = np_
-        self._lock = threading.Condition()
+        self._lock = threading.Lock()
         # (src, dst, tag_token, seq) -> payload
         self._box: dict[tuple, Any] = {}
+        # key -> Event of the (single) receiver parked on that key
+        self._waiters: dict[tuple, threading.Event] = {}
 
     def post(self, key: tuple, obj: Any) -> None:
         with self._lock:
             self._box[key] = obj
-            self._lock.notify_all()
+            ev = self._waiters.pop(key, None)
+        if ev is not None:
+            ev.set()
 
     def take(self, key: tuple, timeout: float) -> Any:
         deadline = time.monotonic() + timeout
         with self._lock:
-            while key not in self._box:
-                remaining = deadline - time.monotonic()
-                if remaining <= 0:
-                    raise StragglerTimeout(f"thread recv timed out on {key}")
-                self._lock.wait(min(remaining, 0.2))
-            return self._box.pop(key)
+            if key in self._box:
+                return self._box.pop(key)
+            ev = self._waiters.setdefault(key, threading.Event())
+        while True:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0 or not ev.wait(min(remaining, 0.2)):
+                with self._lock:
+                    if key in self._box:  # raced with a late post
+                        self._waiters.pop(key, None)
+                        return self._box.pop(key)
+                    if time.monotonic() >= deadline:
+                        self._waiters.pop(key, None)
+                        raise StragglerTimeout(
+                            f"thread recv timed out on {key}"
+                        )
+                continue
+            with self._lock:
+                return self._box.pop(key)
 
     def take_nowait(self, key: tuple) -> Any:
         """Claim ``key`` if posted, else return the ``_MISSING`` sentinel."""
@@ -59,12 +83,6 @@ class ThreadWorld:
     def peek(self, key: tuple) -> bool:
         with self._lock:
             return key in self._box
-
-
-def _freeze(tag: Any):
-    if isinstance(tag, (list, tuple)):
-        return tuple(_freeze(t) for t in tag)
-    return tag
 
 
 class _ThreadRecvRequest(Request):
@@ -104,6 +122,10 @@ class ThreadComm(CommContext):
     copy — exactly MPI's "don't touch the buffer until the send completes"
     contract, except completion here is the matching receive.
     """
+
+    # tells the collectives layer that posted objects alias the sender's
+    # buffers, so every collective hop must pin (copy) array payloads
+    payload_by_reference = True
 
     def __init__(self, world: ThreadWorld, pid: int):
         self.world = world

@@ -20,22 +20,12 @@ from typing import Any, Sequence
 import numpy as np
 
 from ..comm import get_context
+from ..comm.collectives import group_of
 from ..comm.context import CommContext
 from .dmap import Dmap
 from .redist import halo_extents_cached, owned_indices_cached, redistribute
 
 __all__ = ["Dmat", "redistribute"]
-
-
-def _ctx_counter(ctx: CommContext, name: str) -> int:
-    """SPMD-aligned per-context counter (all ranks run the same program)."""
-    counters = getattr(ctx, "_pp_counters", None)
-    if counters is None:
-        counters = {}
-        ctx._pp_counters = counters
-    val = counters.get(name, 0)
-    counters[name] = val + 1
-    return val
 
 
 class Dmat:
@@ -196,10 +186,28 @@ class Dmat:
     # -- global reductions ---------------------------------------------------------
 
     def _allreduce(self, local_val, op, identity=None, name: str = "reduce") -> Any:
-        vals = self.ctx.allgather(local_val, tag="__pp_red")
-        # ranks outside the map (and empty local parts) contribute None
-        vals = [v for v in vals if v is not None]
-        if not vals:
+        """True allreduce over the map's group (recursive doubling / ring
+        via ``comm.collectives``), then a bridge broadcast to any world
+        ranks outside the proclist — every rank must call (SPMD), every
+        rank gets the result.  Tags are counter-derived per (group, op),
+        so interleaved reductions on one context can never cross-match
+        streams (the old fixed ``"__pp_red"`` tag could).
+
+        Ranks with empty local parts contribute ``None``; the collectives
+        combine step skips them."""
+        ctx = self.ctx
+        members = self.dmap.proclist
+        member_set = set(members)
+        out = None
+        if ctx.pid in member_set:
+            out = group_of(ctx, members).allreduce(local_val, op)
+        outsiders = tuple(p for p in range(ctx.np_) if p not in member_set)
+        if outsiders:
+            lead = members[0]
+            bridge = group_of(ctx, (lead,) + outsiders)
+            if bridge.rank is not None:
+                out = bridge.bcast(out if ctx.pid == lead else None, root=lead)
+        if out is None:
             # zero-size global array: sum has an identity, max/min do not
             if identity is not None:
                 return identity
@@ -207,9 +215,6 @@ class Dmat:
                 f"zero-size Dmat reduction '{name}' has no identity "
                 f"(shape {self.shape})"
             )
-        out = vals[0]
-        for v in vals[1:]:
-            out = op(out, v)
         return out
 
     def sum(self):

@@ -17,8 +17,9 @@ from typing import Any, Sequence
 import numpy as np
 
 from ..comm import get_context
+from ..comm.context import ctx_counter as _ctx_counter
 from .dmap import Dmap
-from .dmat import Dmat, _ctx_counter
+from .dmat import Dmat
 
 __all__ = [
     "zeros",
@@ -243,12 +244,17 @@ def agg(a, root: int | None = None):
 
 
 def agg_all(a):
-    """Gather the global array onto *every* rank."""
+    """Gather the global array onto *every* rank: arrival-order ``agg``
+    to the map leader, then a topology-aware broadcast (binomial tree for
+    eager payloads, chunked ring for long arrays, one payload file on
+    FileMPI — see ``comm.collectives``)."""
     if not isinstance(a, Dmat):
         return a
     root = a.dmap.proclist[0]
     full = agg(a, root=root)
-    return a.ctx.bcast(root, full)
+    from ..comm.collectives import world_group
+
+    return world_group(a.ctx).bcast(full, root=root)
 
 
 def scatter(global_arr: np.ndarray, dmap: Dmap, dtype=None) -> Dmat:

@@ -1,8 +1,19 @@
 """JAX-side distribution helpers for the model/serving stack.
 
-``repro.core`` is the NumPy PGAS layer from the paper; this package holds
-the pieces that translate its mapping ideas into JAX/GSPMD land.  Only
-``hints`` ships today — ``sharding`` (Dmap → PartitionSpec trees) and
-``memmodel`` (analytic per-device HBM) are the next planned layers; the
-callers that need them import lazily and degrade when absent.
+``repro.core`` is the NumPy PGAS layer from the paper; this package
+translates its mapping ideas into JAX/GSPMD land:
+
+* ``hints``    — ``constrain``/``mesh_context`` sharding hints (jax-free
+                 until a mesh is installed; identity with maps off).
+* ``sharding`` — Dmap → PartitionSpec trees for params, optimizer state,
+                 batches, and decode state (imports JAX; import the
+                 submodule explicitly).
+* ``memmodel`` — analytic per-device HBM model built on the same trees.
+
+Only ``hints`` is re-exported here so that importing ``repro.dist`` stays
+JAX-free — pRUN file-MPI workers must start fast and run anywhere.
 """
+
+from .hints import constrain, current_mesh, mesh_context
+
+__all__ = ["constrain", "current_mesh", "mesh_context"]

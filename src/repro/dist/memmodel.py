@@ -1,0 +1,69 @@
+"""Analytic per-device HBM model for the dry-run.
+
+XLA's CPU buffer assignment over-approximates temp liveness, so the
+dry-run pairs its ``memory_analysis()`` upper bound with this closed-form
+model: sharded params (+ grads + AdamW moments for training), the
+layer-boundary activation working set, and the decode state.  Everything
+derives from the same ``abstract_params`` / ``abstract_decode_state``
+trees and ``sharding.py`` placements the compile path uses, so the model
+and the compiled artifact can never disagree about shapes.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import Mesh
+
+from ..models.config import ModelConfig
+from ..models.model import abstract_decode_state, abstract_params
+from .sharding import decode_state_shardings, param_shardings
+
+__all__ = ["param_bytes_per_device", "analytic_memory", "V5E_HBM_BYTES"]
+
+V5E_HBM_BYTES = 16 * 2**30
+
+
+def _shard_bytes(tree, shardings, itemsize=None) -> int:
+    """Per-device bytes of a ShapeDtypeStruct tree under its shardings."""
+    total = 0
+    for s, sh in zip(jax.tree.leaves(tree), jax.tree.leaves(shardings)):
+        local = sh.shard_shape(tuple(s.shape))
+        total += math.prod(local) * (itemsize or s.dtype.itemsize)
+    return total
+
+
+def param_bytes_per_device(cfg: ModelConfig, mesh: Mesh) -> int:
+    """Model-weight bytes each device holds (mostly bf16, a few fp32
+    specials — norms, SSM decay terms)."""
+    return _shard_bytes(abstract_params(cfg), param_shardings(cfg, mesh))
+
+
+def analytic_memory(cfg: ModelConfig, mesh: Mesh, kind: str, batch: int,
+                    seq: int, microbatches: int = 1) -> dict:
+    """Per-device HBM breakdown for one (kind, batch, seq) cell."""
+    params_abs = abstract_params(cfg)
+    params_sh = param_shardings(cfg, mesh)
+    dp_total = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    out = {"params": _shard_bytes(params_abs, params_sh)}
+    if kind == "train":
+        # grads mirror param placement/dtype; AdamW m+v are fp32
+        out["grads"] = out["params"]
+        out["opt"] = 2 * _shard_bytes(params_abs, params_sh, itemsize=4)
+        local_tokens = (batch // max(microbatches, 1)) * seq // max(dp_total, 1)
+        # remat keeps one bf16 residual per layer boundary for the backward
+        out["acts"] = local_tokens * cfg.d_model * 2 * (cfg.n_layers + 1)
+    elif kind == "prefill":
+        local_tokens = batch * seq // max(dp_total, 1)
+        # forward-only working set: a handful of live layer boundaries
+        out["acts"] = local_tokens * cfg.d_model * 2 * 4
+    else:  # decode
+        out["kv"] = _shard_bytes(
+            abstract_decode_state(cfg, batch, seq),
+            decode_state_shardings(cfg, mesh, batch, seq),
+        )
+        out["acts"] = (batch // max(dp_total, 1)) * cfg.d_model * 2 * 4
+    out["total"] = sum(out.values())
+    out["fits_v5e_16gb"] = out["total"] <= V5E_HBM_BYTES
+    return out

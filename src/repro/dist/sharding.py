@@ -1,0 +1,192 @@
+"""Dmap → GSPMD bridge: PartitionSpec trees for the JAX model stack.
+
+The paper's ``Dmap`` answers "which rank owns which block"; GSPMD's
+``PartitionSpec`` answers the same question for a named mesh axis.
+``spec_via_dmap`` is the bridge: it builds the equivalent block ``Dmap``
+for a requested partitioning and checks — through the PITFALLS index
+algebra, not a parallel reimplementation — that every device gets the
+even block GSPMD requires, degrading any non-divisible dimension to
+replicated rather than erroring (the maps-off philosophy).
+
+The ``*_shardings`` functions give the dry-run (``repro.launch.dryrun``)
+consistent placement trees for params, optimizer state, batches, logits,
+and decode state.  Placement rules are deliberately simple and uniform:
+
+* params — the trailing-most dimension divisible by the ``model`` axis is
+  tensor-sharded; leading layer-stack dimensions (the ``lax.scan`` axis)
+  are never sharded; everything else replicates.
+* batch-like tensors — the batch dimension shards over the data axes
+  (``("pod", "data")`` on multi-pod meshes), all model dims replicate.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Sequence
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core.dmap import Dmap
+from ..models.config import ModelConfig
+from ..models.model import abstract_decode_state, abstract_params
+
+__all__ = [
+    "dp_axes",
+    "spec_via_dmap",
+    "param_shardings",
+    "opt_state_shardings",
+    "batch_shardings",
+    "logits_sharding",
+    "decode_state_shardings",
+]
+
+
+def dp_axes(mesh: Mesh):
+    """The data-parallel mesh axes: cross-pod DP rides the ``pod`` axis."""
+    return ("pod", "data") if "pod" in mesh.shape else "data"
+
+
+def _dp_total(mesh: Mesh) -> int:
+    return mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+
+
+def _axis_names(a) -> tuple[str, ...]:
+    if a is None:
+        return ()
+    if isinstance(a, (tuple, list)):
+        return tuple(a)
+    return (a,)
+
+
+def spec_via_dmap(mesh: Mesh, shape: Sequence[int], axes: Sequence[Any]) -> P:
+    """PartitionSpec for ``shape`` with dim ``i`` sharded over mesh axis
+    ``axes[i]`` (a name, a tuple of names, or None).
+
+    Names the mesh does not define are treated as replicated; so is any
+    dimension the axis size does not divide evenly.  The surviving grid is
+    cross-checked against the paper-side index algebra: a block ``Dmap``
+    of the same grid must give every rank the identical even block.
+    """
+    shape = tuple(int(s) for s in shape)
+    axes = list(axes) + [None] * (len(shape) - len(axes))
+    entries: list = []
+    grid: list[int] = []
+    for dim, a in zip(shape, axes):
+        names = tuple(n for n in _axis_names(a) if n in mesh.shape)
+        size = math.prod(mesh.shape[n] for n in names) if names else 1
+        if size > 1 and dim % size == 0:
+            entries.append(names if len(names) > 1 else names[0])
+            grid.append(size)
+        else:
+            entries.append(None)
+            grid.append(1)
+    if 1 <= len(grid) <= 4 and math.prod(grid) > 1:
+        dmap = Dmap(grid)
+        for d, g in enumerate(grid):
+            lo, hi = dmap.global_block_range(shape, d, dmap.proclist[0])
+            assert hi - lo == shape[d] // g, (
+                f"PITFALLS block ({lo},{hi}) disagrees with GSPMD even "
+                f"partition of dim {d} ({shape[d]}/{g})"
+            )
+    return P(*entries)
+
+
+# ---------------------------------------------------------------------------
+# Parameter / optimizer placement
+# ---------------------------------------------------------------------------
+
+
+def _n_stack_dims(cfg: ModelConfig, path: str) -> int:
+    """Leading layer-stack dims a leaf carries (the lax.scan axis; never
+    sharded).  Hybrid stacks (groups, every, ...)."""
+    if "/layers/" not in path:
+        return 0
+    return 2 if cfg.family == "hybrid" else 1
+
+
+def _param_spec(cfg: ModelConfig, mesh: Mesh, path: str, shape) -> P:
+    msize = mesh.shape.get("model", 1)
+    offset = _n_stack_dims(cfg, path)
+    if msize > 1:
+        for d in range(len(shape) - 1, offset - 1, -1):
+            if shape[d] % msize == 0 and shape[d] >= msize:
+                axes: list = [None] * len(shape)
+                axes[d] = "model"
+                return spec_via_dmap(mesh, shape, axes)
+    return P()
+
+
+def _walk(tree: dict, fn, prefix: str = "") -> dict:
+    return {
+        k: (
+            _walk(v, fn, f"{prefix}/{k}")
+            if isinstance(v, dict)
+            else fn(f"{prefix}/{k}", v)
+        )
+        for k, v in tree.items()
+    }
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh) -> dict:
+    """NamedSharding tree matching ``abstract_params(cfg)``."""
+    return _walk(
+        abstract_params(cfg),
+        lambda path, s: NamedSharding(mesh, _param_spec(cfg, mesh, path, s.shape)),
+    )
+
+
+def opt_state_shardings(cfg: ModelConfig, mesh: Mesh) -> dict:
+    """AdamW state: m/v mirror the param placement, step replicates."""
+    p = param_shardings(cfg, mesh)
+    return {"m": p, "v": p, "step": NamedSharding(mesh, P())}
+
+
+# ---------------------------------------------------------------------------
+# Batch / activation placement
+# ---------------------------------------------------------------------------
+
+
+def _dp_spec(mesh: Mesh, batch: int, lead: int = 0) -> P:
+    """Shard ``batch`` (at position ``lead``) over the data axes; trailing
+    dims replicate (a PartitionSpec shorter than the rank is legal)."""
+    dp = dp_axes(mesh)
+    if batch % _dp_total(mesh):
+        return P()
+    return P(*([None] * lead), dp)
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, kind: str, batch: int) -> dict:
+    """Input shardings keyed like ``dryrun.input_specs``."""
+    ns = lambda spec: NamedSharding(mesh, spec)  # noqa: E731
+    sh: dict = {}
+    if kind in ("train", "prefill"):
+        key = "inputs_embeds" if cfg.frontend else "tokens"
+        sh[key] = ns(_dp_spec(mesh, batch))
+        if kind == "train":
+            sh["labels"] = ns(_dp_spec(mesh, batch))
+        if cfg.pos_embedding == "mrope":
+            sh["positions"] = ns(_dp_spec(mesh, batch, lead=1))
+    else:  # decode
+        sh["tokens"] = ns(_dp_spec(mesh, batch))
+        sh["pos"] = ns(P())
+    return sh
+
+
+def logits_sharding(cfg: ModelConfig, mesh: Mesh, batch: int) -> NamedSharding:
+    return NamedSharding(mesh, _dp_spec(mesh, batch))
+
+
+def decode_state_shardings(cfg: ModelConfig, mesh: Mesh, batch: int,
+                           max_seq: int):
+    """Decode-state tree: the batch dimension (wherever the family's state
+    layout puts it) shards over the data axes, the rest replicates."""
+    import jax
+
+    def leaf(s):
+        if batch % _dp_total(mesh) == 0:
+            for d, n in enumerate(s.shape):
+                if n == batch:
+                    return NamedSharding(mesh, _dp_spec(mesh, batch, lead=d))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(leaf, abstract_decode_state(cfg, batch, max_seq))

@@ -1,13 +1,12 @@
-import os
-
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
-The two lines above MUST stay first: JAX locks the device count at first
-initialization, and the production meshes (16×16 single-pod, 2×16×16
-multi-pod) need 512 host-platform placeholder devices.  Only this entry
-point pins the count — tests and benches see the real single device.
+The production meshes (16×16 single-pod, 2×16×16 multi-pod) need 512
+host-platform placeholder devices; ``main()`` pins the count via
+``XLA_FLAGS`` *before the first backend initialization* — JAX locks the
+device count at that point, not at import.  Only the CLI entry point
+pins: importing this module (tests, ``benchmarks/collective_attrib.py``)
+leaves the real device set untouched, and callers driving ``lower_cell``
+themselves must pin first.
 
 Per cell this produces, from the compiled artifact alone (no execution):
   * ``memory_analysis()``  — per-device argument/output/temp bytes (fits?)
@@ -22,20 +21,21 @@ Usage::
     PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out f.jsonl]
 """
 
-import argparse  # noqa: E402
-import json  # noqa: E402
-import re  # noqa: E402
-import sys  # noqa: E402
-import time  # noqa: E402
-from functools import partial  # noqa: E402
+import argparse
+import json
+import os
+import re
+import sys
+import time
+from functools import partial  # noqa: F401  (kept for cell bodies)
 
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..configs import SHAPES, cell_applicable, get_config, list_archs  # noqa: E402
-from ..dist.hints import mesh_context  # noqa: E402
-from ..dist.sharding import (  # noqa: E402
+from ..configs import SHAPES, cell_applicable, get_config, list_archs
+from ..dist.hints import mesh_context
+from ..dist.sharding import (
     batch_shardings,
     decode_state_shardings,
     dp_axes,
@@ -44,12 +44,12 @@ from ..dist.sharding import (  # noqa: E402
     param_shardings,
     spec_via_dmap,
 )
-from ..models.config import ModelConfig  # noqa: E402
-from ..models.model import abstract_decode_state, abstract_params  # noqa: E402
-from ..serve.engine import make_prefill_step, make_serve_step  # noqa: E402
-from ..train.optimizer import AdamWConfig  # noqa: E402
-from ..train.train_step import TrainStepConfig, make_train_step  # noqa: E402
-from .mesh import make_production_mesh  # noqa: E402
+from ..models.config import ModelConfig
+from ..models.model import abstract_decode_state, abstract_params
+from ..serve.engine import make_prefill_step, make_serve_step
+from ..train.optimizer import AdamWConfig
+from ..train.train_step import TrainStepConfig, make_train_step
+from .mesh import make_production_mesh
 
 # baseline grad-accum microbatch counts per arch for train_4k (chosen so
 # per-device layer-boundary activations stay ~<=3 GB; see EXPERIMENTS.md)
@@ -413,7 +413,18 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool = False,
     return record
 
 
+def _pin_host_devices(n: int = 512) -> None:
+    """Force ``n`` host-platform placeholder devices.  Must run before the
+    first JAX backend initialization (device query / computation) — JAX
+    locks the device count there."""
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={n}"
+    ).strip()
+
+
 def main(argv=None) -> int:
+    _pin_host_devices()
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", choices=list_archs())
     ap.add_argument("--shape", choices=list(SHAPES))

@@ -4,8 +4,8 @@ memory model — unit-testable without the 512-device initialization."""
 import numpy as np
 import pytest
 
-# dryrun imports the Dmap->PartitionSpec trees; skip until that layer ships
-pytest.importorskip("repro.dist.sharding")
+# the CI tier-1 environment is numpy-only; anywhere with JAX runs these
+pytest.importorskip("jax")
 
 from repro.launch.dryrun import (
     _group_size,

@@ -7,13 +7,12 @@ the plan-cached and cold paths move identical data across ThreadComm and
 FileMPI.
 """
 
-import threading
-
 import numpy as np
 import pytest
 
 import repro.core as pp
-from repro.comm import FileMPI, run_spmd, set_context
+from repro.comm import run_spmd
+from repro.comm.testing import run_filempi_spmd
 from repro.core import Dmap, clear_plan_cache, plan_cache_stats
 from repro.core.redist import build_plan, get_plan
 
@@ -29,33 +28,6 @@ def check_field(a):
     for d, g in enumerate(grids):
         lin = lin * a.shape[d] + g
     np.testing.assert_array_equal(own, lin.astype(a.dtype))
-
-
-def run_filempi_spmd(fn, np_, tmp_path, timeout=120.0):
-    """Run ``fn`` SPMD over FileMPI ranks hosted on threads (one shared
-    message directory, real file transport, no process-launch overhead)."""
-    results = [None] * np_
-    errors = [None] * np_
-
-    def body(pid):
-        ctx = FileMPI(np_=np_, pid=pid, comm_dir=tmp_path, heartbeat=False)
-        set_context(ctx)
-        try:
-            results[pid] = fn()
-        except BaseException as e:  # noqa: BLE001 - surfaced below
-            errors[pid] = e
-        finally:
-            set_context(None)
-
-    threads = [threading.Thread(target=body, args=(pid,)) for pid in range(np_)]
-    for t in threads:
-        t.start()
-    for t in threads:
-        t.join(timeout)
-    for e in errors:
-        if e is not None:
-            raise e
-    return results
 
 
 def roundtrip_body(shape, spec_a, spec_b, use_cache):
