@@ -2,21 +2,24 @@
 
 For each collective, times every algorithm (including the seed baselines
 — ``linear`` bcast, ``gatherbcast`` allgather, allgather-then-reduce
-``gather`` allreduce, ``central`` barrier) across payload sizes on
-ThreadComm and, optionally, FileMPI, and reports latency, effective
-bandwidth, and speedup over the baseline.  The acceptance bar for the
-collectives subsystem is tree bcast and ring allreduce ≥2× over the seed
-paths at np=8 on 4 MB ThreadComm payloads.
+``gather`` allreduce, ``central`` barrier) across payload sizes on any
+transport of the matrix (thread/file/socket), and reports latency,
+effective bandwidth, and speedup over the baseline.  The acceptance bar
+for the collectives subsystem is tree bcast and ring allreduce ≥2× over
+the seed paths at np=8 on 4 MB ThreadComm payloads.
 
 ``--smoke`` is the CI mode: np=4, two sizes, correctness oracles on every
 algorithm plus assertions that message-size-based selection
 (``PPYTHON_COLL_EAGER_BYTES``) picks the expected algorithm — algorithm-
-selection regressions fail the job in seconds without timing noise.
+selection regressions fail the job in seconds without timing noise.  Set
+``PPYTHON_TRANSPORT`` to pin the smoke to one fabric; unset, it covers
+the whole matrix.
 
 Usage::
 
     PYTHONPATH=src python benchmarks/collectives_bench.py [--np 8]
-        [--sizes 4096,4194304] [--iters 10] [--transport thread|file|both]
+        [--sizes 4096,4194304] [--iters 10]
+        [--transport thread|file|socket|all]
     PYTHONPATH=src python benchmarks/collectives_bench.py --smoke
 """
 
@@ -25,19 +28,18 @@ from __future__ import annotations
 import argparse
 import json
 import sys
-import tempfile
 import time
 
 import numpy as np
 
-from repro.comm import get_context, run_spmd, world_group
+from repro.comm import get_context, world_group
 from repro.comm.collectives import (
     select_allgather,
     select_allreduce,
     select_bcast,
     select_gather,
 )
-from repro.comm.testing import run_filempi_spmd
+from repro.comm.testing import TRANSPORTS, run_transport_spmd
 
 # (op, algo) cells; the first algo of each op is the seed baseline the
 # speedup column is measured against
@@ -50,10 +52,7 @@ CASES = {
 
 
 def _spmd(transport, fn, np_, args=()):
-    if transport == "thread":
-        return run_spmd(fn, np_, args=args, timeout=600.0)
-    with tempfile.TemporaryDirectory() as d:
-        return run_filempi_spmd(fn, np_, d, args=args, timeout=600.0)
+    return run_transport_spmd(fn, np_, transport, args=args, timeout=600.0)
 
 
 def _bench_body(op, algo, nbytes, iters):
@@ -181,7 +180,9 @@ def smoke(np_=4) -> int:
     for got, want in checks:
         if got != want:
             failures.append(f"selection: got {got!r}, want {want!r}")
-    for transport in ("thread", "file"):
+    env = os.environ.get("PPYTHON_TRANSPORT")
+    transports = (env,) if env else TRANSPORTS
+    for transport in transports:
         for nbytes in (4096, 1 << 20):
             try:
                 if not all(_spmd(transport, _smoke_body, np_, args=(nbytes,))):
@@ -193,7 +194,8 @@ def smoke(np_=4) -> int:
         for f in failures:
             print(" -", f)
         return 1
-    print(f"collectives smoke OK (np={np_}, both transports, "
+    print(f"collectives smoke OK (np={np_}, "
+          f"transports: {'/'.join(transports)}, "
           f"{sum(len(v) for v in CASES.values()) + 5} algorithm cells)")
     return 0
 
@@ -206,7 +208,7 @@ def main() -> int:
     ap.add_argument("--iters", type=int, default=10)
     ap.add_argument("--repeats", type=int, default=3,
                     help="best-of-N repeats per cell")
-    ap.add_argument("--transport", choices=["thread", "file", "both"],
+    ap.add_argument("--transport", choices=[*TRANSPORTS, "all"],
                     default="thread")
     ap.add_argument("--smoke", action="store_true",
                     help="np=4 correctness + selection oracles (CI mode)")
@@ -214,7 +216,8 @@ def main() -> int:
     if args.smoke:
         return smoke()
     sizes = [int(s) for s in args.sizes.split(",") if s]
-    transports = ["thread", "file"] if args.transport == "both" else [args.transport]
+    transports = list(TRANSPORTS) if args.transport == "all" \
+        else [args.transport]
     rows = bench(args.np_, sizes, args.iters, transports, repeats=args.repeats)
     print(json.dumps(rows, indent=2))
     bar_ok = True

@@ -1,0 +1,198 @@
+"""Point-to-point latency/bandwidth sweep across the transport matrix.
+
+The classic pingpong: even ranks send a payload to their odd partner,
+the partner echoes it back, and the round trip is timed — 1 B to 4 MB,
+on ``thread`` (in-memory mailboxes), ``file`` (the paper's
+shared-directory PythonMPI: pickle + fsync + rename + poll per message),
+and ``socket`` (the TCP peer mesh) at np=2 and np=4 (two concurrent
+pairs).  This is the messaging-overhead experiment of the *pPython
+Performance Study* (arXiv:2309.03931) turned into a regression bench:
+the file transport pays the filesystem round trip the study measured,
+and SocketComm is the answer — the acceptance bar is **≥5× lower
+small-message (≤4 KB) round-trip latency than FileMPI at np=4**.
+
+Results land in ``BENCH_comm.json`` (one row per transport × np × size)
+to seed the perf trajectory.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/pingpong.py [--transport all]
+        [--np 2,4] [--sizes 1,64,1024,4096,65536,1048576,4194304]
+        [--iters auto] [--out BENCH_comm.json] [--check]
+    PYTHONPATH=src python benchmarks/pingpong.py --smoke   # CI mode
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.comm import get_context
+from repro.comm.testing import TRANSPORTS, run_transport_spmd
+
+DEFAULT_SIZES = [1, 64, 1024, 4096, 65536, 1 << 20, 4 << 20]
+SMALL_MSG_BYTES = 4096  # the acceptance criterion's small-message regime
+SPEEDUP_BAR = 5.0
+
+
+def _pingpong_body(nbytes: int, iters: int) -> dict | None:
+    """Echo ``iters`` round trips with the partner rank; returns timing
+    stats on even (timing) ranks, None on odd (echo) ranks."""
+    ctx = get_context()
+    partner = ctx.pid ^ 1
+    if partner >= ctx.np_:
+        return None  # odd world size: this rank sits out
+    tag = ("pp", nbytes)
+    payload = np.arange(nbytes, dtype=np.uint8)  # exact wire payload size
+    if ctx.pid % 2 == 0:
+        # warm-up round also validates the echo end to end
+        ctx.send(partner, tag, payload)
+        back = ctx.recv(partner, tag)
+        assert back.tobytes() == payload.tobytes(), "echo corrupted payload"
+        rtts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            ctx.send(partner, tag, payload)
+            ctx.recv(partner, tag)
+            rtts.append(time.perf_counter() - t0)
+        return {"min": min(rtts), "mean": sum(rtts) / len(rtts)}
+    for _ in range(iters + 1):
+        ctx.send(partner, tag, ctx.recv(partner, tag))
+    return None
+
+
+def _iters_for(nbytes: int, iters: int | None) -> int:
+    if iters:
+        return iters
+    # enough repeats for a stable min without drowning the file transport
+    if nbytes <= 4096:
+        return 100
+    if nbytes <= 65536:
+        return 40
+    return 10
+
+
+def sweep(transports, nps, sizes, iters=None, comm_dir=None) -> list[dict]:
+    rows = []
+    for transport in transports:
+        for np_ in nps:
+            for nbytes in sizes:
+                n = _iters_for(nbytes, iters)
+                res = run_transport_spmd(
+                    _pingpong_body, np_, transport,
+                    comm_dir=comm_dir, args=(nbytes, n), timeout=600.0,
+                )
+                # two concurrent pairs at np=4: report the slower pair —
+                # that is what a collective built on these links would see
+                stats = [r for r in res if r is not None]
+                rtt = max(s["min"] for s in stats)
+                row = {
+                    "transport": transport,
+                    "np": np_,
+                    "nbytes": nbytes,
+                    "iters": n,
+                    "rtt_us": round(rtt * 1e6, 2),
+                    "latency_us": round(rtt * 1e6 / 2, 2),
+                    "rtt_mean_us": round(
+                        max(s["mean"] for s in stats) * 1e6, 2
+                    ),
+                }
+                if nbytes >= 1024:
+                    # payload crosses the wire twice per round trip
+                    row["MBps"] = round(2 * nbytes / rtt / 1e6, 1)
+                rows.append(row)
+                print(
+                    f"{transport:7s} np={np_} {nbytes:>8d}B  "
+                    f"rtt {row['rtt_us']:>10.1f}us"
+                    + (f"  {row['MBps']:>8.1f} MB/s" if "MBps" in row else ""),
+                    flush=True,
+                )
+    return rows
+
+
+def small_message_speedup(rows, np_=4) -> float | None:
+    """min over ≤4 KB sizes of (FileMPI rtt / SocketComm rtt) at np_."""
+    ratios = []
+    for nbytes in {r["nbytes"] for r in rows if r["nbytes"] <= SMALL_MSG_BYTES}:
+        sel = {
+            r["transport"]: r["rtt_us"]
+            for r in rows
+            if r["nbytes"] == nbytes and r["np"] == np_
+        }
+        if "file" in sel and "socket" in sel:
+            ratios.append(sel["file"] / sel["socket"])
+    return min(ratios) if ratios else None
+
+
+def smoke() -> int:
+    """CI mode: correctness-oracle round trips on a tiny sweep.
+
+    Honors ``PPYTHON_TRANSPORT`` so the workflow can pin the matrix to
+    one fabric (the socket smoke step); timing is reported but never
+    asserted — shared runners are too noisy for latency bars."""
+    env = os.environ.get("PPYTHON_TRANSPORT")
+    transports = [env] if env else list(TRANSPORTS)
+    rows = sweep(transports, nps=[2, 4], sizes=[1, 4096, 65536], iters=5)
+    print(f"pingpong smoke OK ({len(rows)} cells on {'/'.join(transports)})")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--transport", default="all",
+                    choices=[*TRANSPORTS, "all"])
+    ap.add_argument("--np", dest="nps", default="2,4",
+                    help="comma-separated world sizes (pairs of ranks)")
+    ap.add_argument("--sizes",
+                    default=",".join(str(s) for s in DEFAULT_SIZES))
+    ap.add_argument("--iters", type=int, default=0,
+                    help="round trips per cell (0 = auto by size)")
+    ap.add_argument("--out", default="BENCH_comm.json")
+    ap.add_argument("--check", action="store_true",
+                    help="fail unless socket beats file by "
+                         f"{SPEEDUP_BAR}x on small messages at np=4")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny correctness sweep (CI mode)")
+    args = ap.parse_args()
+    if args.smoke:
+        return smoke()
+    transports = list(TRANSPORTS) if args.transport == "all" \
+        else [args.transport]
+    nps = [int(x) for x in args.nps.split(",") if x]
+    sizes = [int(x) for x in args.sizes.split(",") if x]
+    rows = sweep(transports, nps, sizes, iters=args.iters or None)
+    ratio = small_message_speedup(rows)
+    summary = {
+        "bench": "pingpong",
+        "rows": rows,
+        "socket_vs_file_small_msg_speedup_np4": (
+            round(ratio, 2) if ratio else None
+        ),
+    }
+    with open(args.out, "w") as f:
+        json.dump(summary, f, indent=2)
+    print(f"\nwrote {args.out}")
+    if ratio is not None:
+        print(f"socket vs file small-message (<= {SMALL_MSG_BYTES} B) "
+              f"round-trip speedup at np=4: {ratio:.1f}x "
+              f"(bar: {SPEEDUP_BAR}x)")
+        if args.check and ratio < SPEEDUP_BAR:
+            print("FAIL: below the acceptance bar", file=sys.stderr)
+            return 1
+    elif args.check:
+        print(
+            "FAIL: --check needs file AND socket rows at np=4 with sizes "
+            f"<= {SMALL_MSG_BYTES} B (nothing was enforced)",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,10 +1,14 @@
 """PythonMPI — pPython's messaging layer (paper §III.D).
 
-Three interchangeable transports behind one interface:
+Four interchangeable transports behind one interface
+(``PPYTHON_TRANSPORT=file|socket|thread`` selects at ``init()``):
 
 * ``FileMPI``   — the paper's transport: pickle payloads through a shared
                   filesystem, one-sided (a send never waits for its receive),
                   messages inspectable on disk.
+* ``SocketComm``— persistent peer-to-peer TCP connections bootstrapped by a
+                  rendezvous (``comm/rendezvous.py``); multi-node with NO
+                  shared filesystem, no fsync/poll on the message path.
 * ``ThreadComm``— in-process queues; used by tests/benchmarks to run SPMD
                   codes without process-launch overhead.
 * ``LocalComm`` — Np=1 degenerate context (every op is a no-op/self-copy).
@@ -12,7 +16,8 @@ Three interchangeable transports behind one interface:
 On top of the point-to-point primitives, ``collectives.py`` provides the
 scalable collective algorithms (binomial tree, recursive doubling, ring,
 pairwise exchange, dissemination) with message-size-based selection and
-``Group`` sub-communicators for any rank subset.
+``Group`` sub-communicators for any rank subset; the serializing
+transports share one pickle-5 out-of-band frame format (``comm/frame.py``).
 
 This package is intentionally NumPy-only (no JAX import): pRUN workers must
 start fast and run anywhere Python runs.
@@ -29,15 +34,18 @@ from .context import (
     ctx_counter,
     get_context,
     init,
+    recv_timeout,
     set_context,
 )
 from .filempi import FileMPI
+from .socketcomm import SocketComm
 from .threadcomm import ThreadComm, run_spmd
 
 __all__ = [
     "CommContext",
     "FileMPI",
     "LocalComm",
+    "SocketComm",
     "ThreadComm",
     "Group",
     "Request",
@@ -46,6 +54,7 @@ __all__ = [
     "group_of",
     "world_group",
     "run_spmd",
+    "recv_timeout",
     "get_context",
     "set_context",
     "init",

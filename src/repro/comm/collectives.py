@@ -102,13 +102,12 @@ def payload_nbytes(obj: Any) -> int:
 
 
 def select_bcast(nbytes: int, size: int, onefile: bool = False) -> str:
-    """Bcast policy for *serializing* transports.  Both shipped transports
-    override it in practice: FileMPI takes the one-file path, and on
-    by-reference transports ``Group.bcast`` prefers the frozen-buffer
-    tree (one pinned copy, zero-copy fan-out) for ndarrays at every size
-    — the chunked ring stays available via ``algo='ring'`` and is the
-    auto policy for a future serializing transport without a one-file
-    hook (e.g. sockets)."""
+    """Bcast policy for *serializing* transports.  FileMPI overrides it
+    with the one-file path, and on by-reference transports ``Group.bcast``
+    prefers the frozen-buffer tree (one pinned copy, zero-copy fan-out)
+    for ndarrays at every size — SocketComm is the transport that follows
+    this table as-is: eager tree for small payloads, chunked ring for
+    long ndarrays."""
     if onefile:
         # one payload file + N in-place readers beats any message tree on a
         # shared filesystem (MatlabMPI's trick)

@@ -3,12 +3,19 @@
 ======================  ====================================================
 MPI                     pPython
 ======================  ====================================================
-MPI_Init                ``init()``
+MPI_Init                ``init()`` — transport picked by
+                        ``PPYTHON_TRANSPORT=file|socket|thread``:
+                        ``file`` = the paper's shared-directory PythonMPI,
+                        ``socket`` = TCP peer mesh bootstrapped through a
+                        rendezvous (no shared filesystem), ``thread`` =
+                        in-process ranks (``run_spmd``/pRUN only)
 MPI_Comm_size / _rank   ``.np_`` / ``.pid``
 MPI_Send / MPI_Recv     ``.send`` / ``.recv`` (plus ``isend``/``irecv``/
                         ``wait_all`` non-blocking requests)
 MPI_Bcast               ``.bcast``      — binomial tree / chunked ring /
-                                          one-file (``collectives.py``)
+                                          one-file on FileMPI, frozen-
+                                          buffer tree on ThreadComm
+                                          (``collectives.py``)
 MPI_Barrier             ``.barrier``    — dissemination
 MPI_Gather              ``.gather``     — arrival-order flat / binomial
 MPI_Allgather           ``.allgather``  — recursive doubling / ring
@@ -23,9 +30,12 @@ MPI_Finalize            ``.finalize()``
 The derived collectives on ``CommContext`` are thin delegations to the
 algorithm layer in ``collectives.py``, which picks tree/ring/recursive-
 doubling variants by message size (``PPYTHON_COLL_EAGER_BYTES``) and
-scopes any rank subset through ``Group``.  A module-level active context
-gives pPython programs the paper's ``pPython.Np`` / ``pPython.Pid`` view
-of the world.
+scopes any rank subset through ``Group``.  SocketComm runs the same
+algorithm layer unmodified — it is a serializing transport without the
+one-file broadcast hook, so auto ``bcast`` resolves to the eager tree or
+the chunked ring by payload size.  A module-level active context gives
+pPython programs the paper's ``pPython.Np`` / ``pPython.Pid`` view of
+the world.
 """
 
 from __future__ import annotations
@@ -46,11 +56,18 @@ __all__ = [
     "get_context",
     "set_context",
     "init",
+    "recv_timeout",
     "Np",
     "Pid",
 ]
 
-DEFAULT_RECV_TIMEOUT = float(os.environ.get("PPYTHON_RECV_TIMEOUT", "300"))
+
+def recv_timeout() -> float:
+    """Receive deadline in seconds (``PPYTHON_RECV_TIMEOUT``, default
+    300).  Read at *call* time — not frozen at import — so launchers and
+    tests can tune it per run (pRUN exports it to workers, a test can
+    monkeypatch it) without re-importing the comm stack."""
+    return float(os.environ.get("PPYTHON_RECV_TIMEOUT", "300"))
 
 
 CTX_COUNTER_WINDOW = 1024
@@ -183,7 +200,7 @@ class CommContext:
         than serializing on the slowest one.
         """
         deadline = time.monotonic() + (
-            DEFAULT_RECV_TIMEOUT if timeout is None else timeout
+            recv_timeout() if timeout is None else timeout
         )
         out: list[Any] = [None] * len(requests)
         pending = {i: r for i, r in enumerate(requests)}
@@ -285,22 +302,54 @@ _global_ctx: CommContext | None = None
 def init(ctx: CommContext | None = None) -> CommContext:
     """pPython_init: install the active context.
 
-    With no argument, builds one from the environment pRUN sets
-    (``PPYTHON_NP``/``PPYTHON_PID``/``PPYTHON_COMM_DIR``) or falls back to a
-    single-rank LocalComm — which is what makes unmodified pPython programs
-    run serially on a laptop.
+    With no argument, builds one from the environment the launcher sets
+    (``PPYTHON_NP``/``PPYTHON_PID`` plus per-transport wiring) or falls
+    back to a single-rank LocalComm — which is what makes unmodified
+    pPython programs run serially on a laptop.
+
+    ``PPYTHON_TRANSPORT`` selects the fabric:
+
+    * ``file`` (default) — the paper's shared-directory PythonMPI
+      (needs ``PPYTHON_COMM_DIR`` on a shared filesystem).
+    * ``socket`` — TCP peer mesh; endpoints are exchanged through a
+      rendezvous (``PPYTHON_RDZV_ADDR`` TCP bootstrap, or
+      ``PPYTHON_RDZV_DIR``/``PPYTHON_COMM_DIR`` one-time file exchange).
+      No shared filesystem on any message path.
+    * ``thread`` — in-process ranks; only meaningful inside a process
+      that hosts the whole world (``run_spmd`` / ``pRUN(...,
+      transport="thread")`` install contexts directly), so ``init()``
+      rejects it with a pointer rather than silently mis-wiring.
     """
     global _global_ctx
     if ctx is None:
         np_ = int(os.environ.get("PPYTHON_NP", "1"))
+        transport = os.environ.get("PPYTHON_TRANSPORT", "file").lower() or "file"
         if np_ > 1:
-            from .filempi import FileMPI
+            if transport == "socket":
+                from .socketcomm import SocketComm
 
-            ctx = FileMPI(
-                np_=np_,
-                pid=int(os.environ["PPYTHON_PID"]),
-                comm_dir=os.environ["PPYTHON_COMM_DIR"],
-            )
+                ctx = SocketComm.bootstrap(
+                    np_=np_, pid=int(os.environ["PPYTHON_PID"])
+                )
+            elif transport == "file":
+                from .filempi import FileMPI
+
+                ctx = FileMPI(
+                    np_=np_,
+                    pid=int(os.environ["PPYTHON_PID"]),
+                    comm_dir=os.environ["PPYTHON_COMM_DIR"],
+                )
+            elif transport == "thread":
+                raise ValueError(
+                    "PPYTHON_TRANSPORT=thread hosts all ranks inside one "
+                    "process: launch through repro.comm.run_spmd or "
+                    "pRUN(..., transport='thread') instead of init()"
+                )
+            else:
+                raise ValueError(
+                    f"unknown PPYTHON_TRANSPORT {transport!r} "
+                    "(expected file|socket|thread)"
+                )
         else:
             ctx = LocalComm()
     _global_ctx = ctx

@@ -23,17 +23,23 @@ so the launcher can restart them from the last checkpoint.
 
 from __future__ import annotations
 
-import hashlib
 import mmap
 import os
-import pickle
-import struct
 import threading
 import time
 from pathlib import Path
 from typing import Any
 
-from .context import DEFAULT_RECV_TIMEOUT, CommContext, Request, StragglerTimeout
+from .context import CommContext, Request, StragglerTimeout, recv_timeout
+from .frame import (
+    FLAG_CHUNKED as _FLAG_CHUNKED,
+    ChunkHeader as _ChunkHeader,
+    decode_frame as _decode_frame,
+    encode_frame as _encode_frame,
+    max_msg_bytes as _max_msg_bytes,
+    read_footer as _read_footer,
+    tag_token as _tag_token,
+)
 
 __all__ = ["FileMPI"]
 
@@ -41,95 +47,12 @@ _POLL_MIN = 0.0005
 _POLL_MAX = 0.05
 HEARTBEAT_PERIOD = 5.0
 
-# Frame layout: the pickle bytes first, then the raw out-of-band buffers
-# (pickle protocol 5 ``buffer_callback``), then a fixed-size trailer of
-# per-buffer lengths + counts + a flag byte + magic.  Large array payloads
-# travel as their raw bytes — never re-encoded into the pickle stream —
-# and the whole message is one file and ONE fsync.  Putting the pickle
-# stream first keeps the paper's debugging affordance: a buffer-free
-# message sitting on disk can still be inspected with a naive
-# ``pickle.load`` (the loader stops at the STOP opcode and never sees the
-# trailer).  The flag byte marks chunk-header frames so ``probe`` can
-# classify a pending message from the 17-byte footer alone.
-_MAGIC = b"PPK5"
-_FOOT = struct.Struct("<QIB4s")  # head_len, nbuf, flags, magic — at file end
-_FLAG_CHUNKED = 1
-
-
-def _max_msg_bytes() -> int:
-    """Chunking threshold; 0 (default) disables chunking."""
-    return int(os.environ.get("PPYTHON_MAX_MSG_BYTES", "0") or 0)
-
-
-class _ChunkHeader:
-    """First message of a chunked payload: how many raw pieces follow."""
-
-    def __init__(self, nchunks: int, total: int):
-        self.nchunks = nchunks
-        self.total = total
-
-
-def _encode_frame(obj: Any, flags: int = 0) -> list:
-    """Serialize ``obj`` into a list of bytes-like pieces (no joining —
-    the caller streams them straight to the file)."""
-    buffers: list[pickle.PickleBuffer] = []
-    head = pickle.dumps(obj, protocol=5, buffer_callback=buffers.append)
-    raws = []
-    for b in buffers:
-        try:
-            raws.append(b.raw())
-        except BufferError:  # non-contiguous exporter: fall back to a copy
-            raws.append(bytes(b))
-    parts: list = [head]
-    parts.extend(raws)
-    parts.append(struct.pack(f"<{len(raws)}Q", *[len(r) for r in raws]))
-    parts.append(_FOOT.pack(len(head), len(raws), flags, _MAGIC))
-    return parts
-
-
-def _read_footer(path: Path) -> tuple[int, int, int] | None:
-    """(head_len, nbuf, flags) from a published frame's trailing bytes,
-    or None if the file vanished or is not a valid frame."""
-    try:
-        with open(path, "rb") as f:
-            f.seek(-_FOOT.size, os.SEEK_END)
-            head_len, nbuf, flags, magic = _FOOT.unpack(f.read(_FOOT.size))
-    except (FileNotFoundError, OSError, struct.error):
-        return None
-    if magic != _MAGIC:
-        return None
-    return head_len, nbuf, flags
-
-
-def _decode_frame(buf) -> Any:
-    """Rebuild an object from a frame held in a bytes-like ``buf``.
-
-    When ``buf`` is a copy-on-write mmap of the message file, array
-    payloads are reconstructed directly over the mapped pages — the raw
-    bytes are never copied into userspace a second time.
-    """
-    mv = memoryview(buf)
-    head_len, nbuf, _flags, magic = _FOOT.unpack_from(mv, len(mv) - _FOOT.size)
-    if magic != _MAGIC:
-        raise ValueError(f"bad message frame magic {magic!r}")
-    lens = struct.unpack_from(
-        f"<{nbuf}Q", mv, len(mv) - _FOOT.size - 8 * nbuf
-    )
-    head = mv[:head_len]
-    bufs = []
-    off = head_len
-    for n in lens:
-        bufs.append(mv[off : off + n])
-        off += n
-    return pickle.loads(head, buffers=bufs)
-
-
-def _tag_token(tag: Any) -> str:
-    """Filesystem-safe token for an arbitrary hashable tag."""
-    s = repr(tag)
-    if len(s) <= 40 and all(c.isalnum() or c in "._-" for c in s):
-        return s
-    return hashlib.sha1(s.encode()).hexdigest()[:16]
+# Frame layout (see comm/frame.py, shared with SocketComm): pickle bytes
+# first, then the raw out-of-band buffers, then a fixed trailer.  Large
+# array payloads travel as raw bytes — never re-encoded into the pickle
+# stream — and the whole message is one file and ONE fsync.  The flag
+# byte marks chunk-header frames so ``probe`` can classify a pending
+# message from the 17-byte footer alone.
 
 
 class _FileRecvRequest(Request):
@@ -155,7 +78,7 @@ class _FileRecvRequest(Request):
         if self._done:
             return self._value
         deadline = time.monotonic() + (
-            DEFAULT_RECV_TIMEOUT if timeout is None else timeout
+            recv_timeout() if timeout is None else timeout
         )
         pause = _POLL_MIN
         while not self.test():
@@ -303,7 +226,7 @@ class FileMPI(CommContext):
         key = (source, _tag_token(tag))
         seq = self._recv_seq.get(key, 0)
         deadline = time.monotonic() + (
-            DEFAULT_RECV_TIMEOUT if timeout is None else timeout
+            recv_timeout() if timeout is None else timeout
         )
         pause = _POLL_MIN
         while True:
@@ -375,7 +298,7 @@ class FileMPI(CommContext):
         if self.pid == root:
             self._publish(payload, _encode_frame(obj))
             return obj
-        deadline = time.monotonic() + DEFAULT_RECV_TIMEOUT
+        deadline = time.monotonic() + recv_timeout()
         pause = _POLL_MIN
         while not payload.exists():
             if time.monotonic() > deadline:

@@ -1,21 +1,80 @@
-"""SPMD harness helpers for tests and benchmarks.
+"""SPMD harness helpers for tests and benchmarks: the transport matrix.
 
-``run_filempi_spmd`` mirrors ``threadcomm.run_spmd`` but hosts each rank's
-``FileMPI`` context on a thread over one shared message directory — the
-real file transport without process-launch overhead.  Used by the test
-suite and the collective/redistribution benchmarks; kept in the package
-(not ``tests/``) so both can import one copy.
+``run_transport_spmd(fn, np_, transport)`` mirrors
+``threadcomm.run_spmd`` but hosts each rank's context on a thread over
+any of the three transports — ``thread`` (in-memory mailboxes), ``file``
+(the paper's shared-directory FileMPI), ``socket`` (the TCP peer mesh) —
+so one parametrized test exercises every algorithm on every fabric
+without process-launch overhead.  Kept in the package (not ``tests/``)
+so the test suite and the collective/redistribution/pingpong benchmarks
+import one copy.
 """
 
 from __future__ import annotations
 
+import tempfile
 import threading
 from typing import Any, Callable
 
-from .context import set_context
+from .context import CommContext, set_context
 from .filempi import FileMPI
+from .rendezvous import bind_listener
+from .socketcomm import SocketComm
+from .threadcomm import run_spmd
 
-__all__ = ["run_filempi_spmd"]
+__all__ = [
+    "TRANSPORTS",
+    "run_filempi_spmd",
+    "run_socket_spmd",
+    "run_transport_spmd",
+]
+
+# the full matrix every algorithm test should pass on
+TRANSPORTS = ("thread", "file", "socket")
+
+
+def _run_ctx_spmd(
+    make_ctx: Callable[[int], CommContext],
+    fn: Callable[..., Any],
+    np_: int,
+    args: tuple,
+    timeout: float,
+    label: str,
+) -> list[Any]:
+    """Host ``np_`` contexts on threads, run ``fn(*args)`` per rank, and
+    return rank-ordered results; the first rank exception is re-raised.
+    Contexts are finalized even when a rank fails, so sockets/threads
+    never leak across tests."""
+    results: list[Any] = [None] * np_
+    errors: list[BaseException | None] = [None] * np_
+
+    def body(pid: int) -> None:
+        try:
+            ctx = make_ctx(pid)
+        except BaseException as e:  # noqa: BLE001 - surfaced to caller
+            errors[pid] = e
+            return
+        set_context(ctx)
+        try:
+            results[pid] = fn(*args)
+        except BaseException as e:  # noqa: BLE001 - surfaced to caller
+            errors[pid] = e
+        finally:
+            set_context(None)
+            ctx.finalize()
+
+    threads = [threading.Thread(target=body, args=(pid,)) for pid in range(np_)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout)
+    for t in threads:
+        if t.is_alive():
+            raise RuntimeError(f"{label} SPMD body did not finish in time")
+    for e in errors:
+        if e is not None:
+            raise e
+    return results
 
 
 def run_filempi_spmd(
@@ -27,31 +86,59 @@ def run_filempi_spmd(
 ) -> list[Any]:
     """Run ``fn(*args)`` as an SPMD body on ``np_`` FileMPI thread-ranks.
 
-    Results are rank-ordered; the first rank exception is re-raised in
-    the caller.  Heartbeats are off (single process — liveness is the
-    thread's)."""
-    results: list[Any] = [None] * np_
-    errors: list[BaseException | None] = [None] * np_
+    Heartbeats are off (single process — liveness is the thread's)."""
+    return _run_ctx_spmd(
+        lambda pid: FileMPI(np_=np_, pid=pid, comm_dir=comm_dir,
+                            heartbeat=False),
+        fn, np_, args, timeout, "FileMPI",
+    )
 
-    def body(pid: int) -> None:
-        ctx = FileMPI(np_=np_, pid=pid, comm_dir=comm_dir, heartbeat=False)
-        set_context(ctx)
-        try:
-            results[pid] = fn(*args)
-        except BaseException as e:  # noqa: BLE001 - surfaced to caller
-            errors[pid] = e
-        finally:
-            set_context(None)
 
-    threads = [threading.Thread(target=body, args=(pid,)) for pid in range(np_)]
-    for t in threads:
-        t.start()
-    for t in threads:
-        t.join(timeout)
-    for t in threads:
-        if t.is_alive():
-            raise RuntimeError("FileMPI SPMD body did not finish in time")
-    for e in errors:
-        if e is not None:
-            raise e
-    return results
+def run_socket_spmd(
+    fn: Callable[..., Any],
+    np_: int,
+    args: tuple = (),
+    timeout: float = 120.0,
+) -> list[Any]:
+    """Run ``fn(*args)`` as an SPMD body on ``np_`` SocketComm
+    thread-ranks over loopback TCP.
+
+    Every rank's listener is bound up front and the endpoint table
+    shared directly (the in-process analogue of the rendezvous — the
+    rendezvous protocols themselves are covered by dedicated tests), so
+    the body starts with all peers reachable, exactly as after a real
+    bootstrap."""
+    listeners = [bind_listener("127.0.0.1") for _ in range(np_)]
+    endpoints = [("127.0.0.1", s.getsockname()[1]) for s in listeners]
+    return _run_ctx_spmd(
+        lambda pid: SocketComm(np_, pid, endpoints, listeners[pid]),
+        fn, np_, args, timeout, "SocketComm",
+    )
+
+
+def run_transport_spmd(
+    fn: Callable[..., Any],
+    np_: int,
+    transport: str,
+    comm_dir=None,
+    args: tuple = (),
+    timeout: float = 120.0,
+) -> list[Any]:
+    """One SPMD entry point across the transport matrix.
+
+    ``transport`` is ``thread``/``file``/``socket`` (``filempi`` accepted
+    as an alias for ``file``); ``comm_dir`` is only consulted by the file
+    transport and defaults to a throwaway temp directory."""
+    if transport == "thread":
+        return run_spmd(fn, np_, args=args, timeout=timeout)
+    if transport in ("file", "filempi"):
+        if comm_dir is not None:
+            return run_filempi_spmd(fn, np_, comm_dir, args=args,
+                                    timeout=timeout)
+        with tempfile.TemporaryDirectory(prefix="ppython_test_") as d:
+            return run_filempi_spmd(fn, np_, d, args=args, timeout=timeout)
+    if transport == "socket":
+        return run_socket_spmd(fn, np_, args=args, timeout=timeout)
+    raise ValueError(
+        f"unknown transport {transport!r} (expected one of {TRANSPORTS})"
+    )

@@ -15,11 +15,11 @@ from collections import defaultdict
 from typing import Any, Callable
 
 from .context import (
-    DEFAULT_RECV_TIMEOUT,
     CommContext,
     Request,
     StragglerTimeout,
     _freeze,
+    recv_timeout,
     set_context,
 )
 
@@ -106,7 +106,7 @@ class _ThreadRecvRequest(Request):
         if not self._done:
             self._value = self._world.take(
                 self._box_key,
-                DEFAULT_RECV_TIMEOUT if timeout is None else timeout,
+                recv_timeout() if timeout is None else timeout,
             )
             self._done = True
         return self._value
@@ -154,7 +154,7 @@ class ThreadComm(CommContext):
         seq = self._recv_seq[k]
         obj = self.world.take(
             self._key(source, self.pid, tag, seq),
-            DEFAULT_RECV_TIMEOUT if timeout is None else timeout,
+            recv_timeout() if timeout is None else timeout,
         )
         self._recv_seq[k] = seq + 1  # commit only after a successful claim
         return obj

@@ -1,22 +1,35 @@
 """pRUN — pPython's SPMD launcher (paper §III.A).
 
 ``pRUN(target, np_)`` starts ``np_`` Python instances of the same program
-(single program, multiple data), wiring each to the file-based PythonMPI
-through environment variables::
+(single program, multiple data), wiring each to the selected PythonMPI
+transport through environment variables::
 
-    PPYTHON_NP        world size
-    PPYTHON_PID       this instance's rank
-    PPYTHON_COMM_DIR  shared directory for message files
+    PPYTHON_NP         world size
+    PPYTHON_PID        this instance's rank
+    PPYTHON_TRANSPORT  file | socket | thread
+    PPYTHON_COMM_DIR   shared directory (file transport; scratch for
+                       result files otherwise)
+    PPYTHON_RDZV_ADDR  rank-0 TCP rendezvous (socket transport)
 
 ``target`` is either a script path (launched as ``python script.py``) or a
 ``"module:function"`` string (launched through ``prun_worker``).  Rank
-results come back over MPI: each worker sends its return value to rank 0's
-result mailbox, mirroring how gridMatlab collected leader output.
+results come back through rank-local result files in the launch scratch
+directory, mirroring how gridMatlab collected leader output.
+
+Transports: ``file`` (default) is the paper's shared-directory messaging;
+``socket`` launches the same subprocesses but messages flow over a TCP
+peer mesh bootstrapped through a loopback rendezvous server — no comm
+directory on any message path; ``thread`` hosts every rank on a thread of
+*this* process (module:function targets only) — the fastest way to run an
+SPMD body with zero launch overhead.
 
 Fault handling beyond the paper: a per-rank supervisor notices dead
 processes (nonzero exit) and, when ``restarts > 0``, relaunches the rank
 with the same environment — restarted ranks are expected to resume from
-the last checkpoint (see ``repro.train.checkpoint``).
+the last checkpoint (see ``repro.train.checkpoint``).  An auto-created
+scratch directory is removed on clean exit but **kept on failure** (with
+a notice) so message files and results can be inspected post-mortem —
+the paper's debugging affordance, extended to crashes.
 """
 
 from __future__ import annotations
@@ -27,6 +40,7 @@ import pickle
 import subprocess
 import sys
 import tempfile
+import threading
 import time
 from pathlib import Path
 from typing import Any, Sequence
@@ -46,11 +60,56 @@ def _worker_cmd(target: str, extra_args: Sequence[str]) -> list[str]:
     return [sys.executable, target, *extra_args]
 
 
+def _serve_rendezvous(np_: int, timeout: float):
+    """Bind a loopback rendezvous listener and serve the endpoint
+    exchange on a daemon thread.  Binding port 0 and serving the *live*
+    socket (instead of probe-port-then-close-then-rebind) means the
+    advertised port can never be stolen between probe and bind, and two
+    concurrent pRUN launches can never cross-register into each other's
+    server.  Returns (addr, server_socket); close the socket to stop."""
+    from ..comm.rendezvous import bind_listener, serve_endpoint_table
+
+    srv = bind_listener("127.0.0.1")
+    addr = f"127.0.0.1:{srv.getsockname()[1]}"
+    deadline = time.monotonic() + timeout
+
+    def serve() -> None:
+        try:
+            serve_endpoint_table(srv, np_, deadline)
+        except Exception:  # noqa: BLE001 - workers surface their own
+            pass  # timeout/close: the supervising loop reports the failure
+
+    threading.Thread(target=serve, name="ppython-rdzv", daemon=True).start()
+    return addr, srv
+
+
+def _run_threaded(target: str, np_: int, args: Sequence[str],
+                  timeout: float, env: dict | None) -> list[Any]:
+    """transport="thread": host every rank on a thread of this process."""
+    if ":" not in target or os.path.exists(target):
+        raise ValueError(
+            "pRUN(transport='thread') needs a module:function target "
+            f"(scripts own the process; got {target!r})"
+        )
+    if env:
+        raise ValueError(
+            "pRUN(transport='thread') cannot give ranks a private env= — "
+            "they share this process; set os.environ or use a process "
+            "transport"
+        )
+    from ..comm import run_spmd
+
+    mod_name, fn_name = target.split(":", 1)
+    fn = getattr(importlib.import_module(mod_name), fn_name)
+    return run_spmd(fn, np_, args=tuple(args), timeout=timeout)
+
+
 def pRUN(
     target: str,
     np_: int,
     *,
     args: Sequence[str] = (),
+    transport: str | None = None,
     comm_dir: str | os.PathLike | None = None,
     timeout: float = 600.0,
     restarts: int = 0,
@@ -59,9 +118,26 @@ def pRUN(
 ) -> list[Any]:
     """Launch ``np_`` SPMD instances of ``target``; return per-rank results.
 
-    Results are only collected for ``module:function`` targets (scripts run
-    for side effects, matching the paper's usage).
+    ``transport`` is ``file``/``socket``/``thread`` (default: the
+    ``PPYTHON_TRANSPORT`` environment, else ``file``).  Results are only
+    collected for ``module:function`` targets (scripts run for side
+    effects, matching the paper's usage).
     """
+    transport = (transport or os.environ.get("PPYTHON_TRANSPORT")
+                 or "file").lower()
+    if transport not in ("file", "socket", "thread"):
+        raise ValueError(
+            f"unknown transport {transport!r} (expected file|socket|thread)"
+        )
+    if transport == "thread":
+        return _run_threaded(target, np_, args, timeout, env)
+    if transport == "socket" and restarts > 0:
+        raise ValueError(
+            "pRUN restarts need the file transport for now: a restarted "
+            "rank cannot re-join a completed socket rendezvous (peers hold "
+            "the dead rank's stale endpoint)"
+        )
+
     own_dir = comm_dir is None
     comm_dir = Path(
         tempfile.mkdtemp(prefix="ppython_") if own_dir else comm_dir
@@ -72,7 +148,25 @@ def pRUN(
     base_env = dict(os.environ)
     base_env.update(env or {})
     base_env["PPYTHON_NP"] = str(np_)
+    base_env["PPYTHON_TRANSPORT"] = transport
+    # the directory doubles as the result mailbox in every mode; only the
+    # file transport also sends messages through it
     base_env["PPYTHON_COMM_DIR"] = str(comm_dir)
+    rdzv_srv = None
+    if transport == "socket" and "PPYTHON_RDZV_ADDR" not in base_env:
+        # single-node launch: the launcher itself serves the rendezvous
+        # over loopback, so the comm dir never appears on a message path
+        # (multi-node jobs point PPYTHON_RDZV_ADDR at a reachable host
+        # instead — see slurm.py, where rank 0 serves)
+        addr, rdzv_srv = _serve_rendezvous(np_, timeout)
+        base_env["PPYTHON_RDZV_ADDR"] = addr
+        base_env["PPYTHON_RDZV_EXTERNAL"] = "1"
+        base_env.setdefault("PPYTHON_HOST", "127.0.0.1")
+    elif transport == "socket":
+        # caller brought their own rendezvous address: rank 0 serves it,
+        # so a stale EXTERNAL flag (e.g. inherited from an enclosing
+        # launcher) must not leave the job serverless
+        base_env.pop("PPYTHON_RDZV_EXTERNAL", None)
     # keep each instance single-threaded (paper §III.F.4: multithreaded BLAS
     # oversubscribes the node when several ranks share it)
     base_env.setdefault("OMP_NUM_THREADS", "1")
@@ -92,6 +186,7 @@ def pRUN(
         launch(pid)
 
     deadline = time.monotonic() + timeout
+    failed = True
     try:
         while True:
             alive = False
@@ -130,13 +225,31 @@ def pRUN(
                         results.append(pickle.load(f))
                 else:
                     results.append(None)
+            # only now is the run a success: an unreadable result file
+            # (truncated pickle, missing class) keeps the scratch dir
+            failed = False
             return results
+        failed = False
         return []
     finally:
+        if rdzv_srv is not None:
+            try:
+                rdzv_srv.close()  # stops the launcher's rendezvous thread
+            except OSError:
+                pass
         if own_dir:
-            import shutil
+            if failed:
+                # keep messages/results on disk for post-mortem — the
+                # paper's "inspect the unclaimed .buf file" affordance
+                print(
+                    f"pRUN: keeping scratch dir {comm_dir} for post-mortem "
+                    f"(launch failed)",
+                    file=sys.stderr,
+                )
+            else:
+                import shutil
 
-            shutil.rmtree(comm_dir, ignore_errors=True)
+                shutil.rmtree(comm_dir, ignore_errors=True)
 
 
 def prun_worker(target: str, argv: Sequence[str]) -> None:
@@ -149,11 +262,13 @@ def prun_worker(target: str, argv: Sequence[str]) -> None:
         mod = importlib.import_module(mod_name)
         fn = getattr(mod, fn_name)
         result = fn(*argv) if argv else fn()
-        out = Path(os.environ["PPYTHON_COMM_DIR"]) / f"result_{ctx.pid}.pkl"
-        tmp = out.with_suffix(".tmp")
-        with open(tmp, "wb") as f:
-            pickle.dump(result, f, protocol=5)
-        os.rename(tmp, out)
+        out_dir = os.environ.get("PPYTHON_COMM_DIR")
+        if out_dir:  # multi-node socket jobs may run without any scratch dir
+            out = Path(out_dir) / f"result_{ctx.pid}.pkl"
+            tmp = out.with_suffix(".tmp")
+            with open(tmp, "wb") as f:
+                pickle.dump(result, f, protocol=5)
+            os.rename(tmp, out)
     finally:
         ctx.finalize()
 

@@ -2,8 +2,11 @@
 
 pPython submits SPMD jobs through the cluster scheduler instead of
 launching local processes.  ``slurm_script`` renders an ``sbatch`` file in
-which every Slurm task runs one pPython instance wired to the shared
-comm directory; ``submit`` shells out to ``sbatch`` when present.
+which every Slurm task runs one pPython instance — wired either to the
+shared comm directory (``transport="file"``, the paper's messaging) or to
+the TCP peer mesh via a rank-0 rendezvous (``transport="socket"``, no
+shared filesystem required); ``submit`` shells out to ``sbatch`` when
+present.
 
 A TPU-pod variant is included: on TPU the "scheduler" launches one process
 per host and initializes ``jax.distributed`` so all hosts join one JAX
@@ -24,8 +27,10 @@ __all__ = ["slurm_script", "submit", "tpu_pod_script"]
 def slurm_script(
     target: str,
     np_: int,
-    comm_dir: str,
+    comm_dir: str | None = None,
     *,
+    transport: str = "file",
+    rdzv_port: int = 29400,
     job_name: str = "ppython",
     partition: str | None = None,
     time_limit: str = "01:00:00",
@@ -33,7 +38,20 @@ def slurm_script(
     nodes: int | None = None,
     python: str = "python",
 ) -> str:
-    """Render an sbatch script running ``np_`` pPython instances."""
+    """Render an sbatch script running ``np_`` pPython instances.
+
+    ``transport="file"`` (the paper's messaging) needs ``comm_dir`` on a
+    filesystem every node shares.  ``transport="socket"`` needs **no
+    shared filesystem at all**: the script derives the rendezvous address
+    from the job's first node, every task exchanges its TCP endpoint
+    through rank 0, and messages flow over the peer mesh.
+    """
+    if transport not in ("file", "socket"):
+        raise ValueError(
+            f"slurm_script transport must be file|socket, got {transport!r}"
+        )
+    if transport == "file" and not comm_dir:
+        raise ValueError("file transport needs comm_dir on a shared filesystem")
     lines = [
         "#!/bin/bash",
         f"#SBATCH --job-name={job_name}",
@@ -47,9 +65,25 @@ def slurm_script(
         lines.append(f"#SBATCH --nodes={nodes}")
     lines += [
         "",
-        "# one-sided file messaging needs a shared filesystem (paper §III.D)",
         f"export PPYTHON_NP={np_}",
-        f"export PPYTHON_COMM_DIR={comm_dir}",
+        f"export PPYTHON_TRANSPORT={transport}",
+    ]
+    if transport == "file":
+        lines += [
+            "# one-sided file messaging needs a shared filesystem (paper §III.D)",
+            f"export PPYTHON_COMM_DIR={comm_dir}",
+        ]
+    else:
+        lines += [
+            "# TCP transport: rank 0 (on the job's first node) serves the",
+            "# endpoint rendezvous — no shared filesystem on any message path",
+            'PPYTHON_RDZV_HOST=$(scontrol show hostnames "$SLURM_JOB_NODELIST" '
+            "| head -n1)",
+            f"export PPYTHON_RDZV_ADDR=${{PPYTHON_RDZV_HOST}}:{rdzv_port}",
+        ]
+        if comm_dir:
+            lines.append(f"export PPYTHON_COMM_DIR={comm_dir}  # results only")
+    lines += [
         "export OMP_NUM_THREADS=1  # avoid BLAS oversubscription (paper §III.F.4)",
         "export OPENBLAS_NUM_THREADS=1",
         "export MKL_NUM_THREADS=1",

@@ -1,11 +1,11 @@
-"""Collectives subsystem: every algorithm, both transports, odd groups.
+"""Collectives subsystem: every algorithm, the full transport matrix.
 
 Each algorithm (binomial tree bcast/reduce/gather, recursive-doubling and
 ring allreduce/allgather, ring reduce_scatter, pairwise alltoallv,
 dissemination barrier, plus the seed baselines kept for benchmarking) is
 checked byte-identical against a locally computed reference on ThreadComm
-AND FileMPI, across non-power-of-two np, non-contiguous/permuted
-proclists, empty payloads, and ndarrays larger than
+AND FileMPI AND SocketComm, across non-power-of-two np, non-contiguous/
+permuted proclists, empty payloads, and ndarrays larger than
 ``PPYTHON_MAX_MSG_BYTES``.
 """
 
@@ -22,21 +22,19 @@ from repro.comm.collectives import (
     select_bcast,
     select_gather,
 )
-from repro.comm.testing import run_filempi_spmd
+from repro.comm.testing import TRANSPORTS, run_filempi_spmd, run_transport_spmd
 from repro.core import Dmap
 
-TRANSPORTS = ["thread", "file"]
-
-# module-level so FileMPI can pickle instances
+# module-level so the serializing transports can pickle instances
 Pair = collections.namedtuple("Pair", "idx arr")
 
 
 @pytest.fixture(params=TRANSPORTS)
 def spmd(request, tmp_path):
     """SPMD runner fixture: spmd(fn, np_) on the parametrized transport."""
-    if request.param == "thread":
-        return lambda fn, np_: run_spmd(fn, np_)
-    return lambda fn, np_: run_filempi_spmd(fn, np_, tmp_path)
+    return lambda fn, np_: run_transport_spmd(
+        fn, np_, request.param, comm_dir=tmp_path
+    )
 
 
 def _payload(rank, kind):
@@ -96,10 +94,10 @@ class TestBcast:
                     _assert_same(got, _payload(root, k))
 
     def test_large_payload_auto_path_is_exact(self, spmd, monkeypatch):
-        """Auto mode on the shipped transports resolves to onefile
-        (FileMPI) or frozen-tree (ThreadComm) — select_bcast's ring branch
-        is the policy for serializing transports without a one-file hook
-        and stays explicit-only today."""
+        """Auto mode resolves per transport: onefile (FileMPI),
+        frozen-tree (ThreadComm), or select_bcast's chunked ring
+        (SocketComm — the serializing transport without a one-file
+        hook)."""
         monkeypatch.setenv("PPYTHON_COLL_EAGER_BYTES", "4096")
         want = np.arange(100_000, dtype=np.int64)
 

@@ -1,10 +1,10 @@
-"""Redistribution engine v2: plan cache correctness on both transports.
+"""Redistribution engine v2: plan cache correctness on the transport matrix.
 
 3-D/4-D block <-> cyclic <-> block-cyclic(+overlap) round-trips with the
 ``arange_field`` oracle (every element encodes its own global index, so a
 correct redistribution is simply "local values == global ids"), asserting
-the plan-cached and cold paths move identical data across ThreadComm and
-FileMPI.
+the plan-cached and cold paths move identical data across ThreadComm,
+FileMPI, and SocketComm.
 """
 
 import numpy as np
@@ -12,7 +12,7 @@ import pytest
 
 import repro.core as pp
 from repro.comm import run_spmd
-from repro.comm.testing import run_filempi_spmd
+from repro.comm.testing import TRANSPORTS, run_transport_spmd
 from repro.core import Dmap, clear_plan_cache, plan_cache_stats
 from repro.core.redist import build_plan, get_plan
 
@@ -66,35 +66,31 @@ SPECS_4D = [
 ]
 
 
-@pytest.mark.parametrize("transport", ["thread", "filempi"])
+@pytest.mark.parametrize("transport", TRANSPORTS)
 @pytest.mark.parametrize("src", range(len(SPECS_3D)))
 @pytest.mark.parametrize("dst", range(len(SPECS_3D)))
 def test_3d_roundtrip(transport, src, dst, tmp_path):
     shape = (9, 7, 10)
     args = (shape, SPECS_3D[src], SPECS_3D[dst], True)
-    if transport == "thread":
-        res = run_spmd(roundtrip_body, 4, args=args)
-    else:
-        res = run_filempi_spmd(lambda: roundtrip_body(*args), 4, tmp_path)
+    res = run_transport_spmd(roundtrip_body, 4, transport,
+                             comm_dir=tmp_path, args=args)
     want = np.arange(np.prod(shape), dtype=float).reshape(shape)
     np.testing.assert_array_equal(res[0], want)
 
 
-@pytest.mark.parametrize("transport", ["thread", "filempi"])
+@pytest.mark.parametrize("transport", TRANSPORTS)
 @pytest.mark.parametrize("src", range(len(SPECS_4D)))
 @pytest.mark.parametrize("dst", range(len(SPECS_4D)))
 def test_4d_roundtrip(transport, src, dst, tmp_path):
     shape = (4, 6, 5, 3)
     args = (shape, SPECS_4D[src], SPECS_4D[dst], True)
-    if transport == "thread":
-        res = run_spmd(roundtrip_body, 4, args=args)
-    else:
-        res = run_filempi_spmd(lambda: roundtrip_body(*args), 4, tmp_path)
+    res = run_transport_spmd(roundtrip_body, 4, transport,
+                             comm_dir=tmp_path, args=args)
     want = np.arange(np.prod(shape), dtype=float).reshape(shape)
     np.testing.assert_array_equal(res[0], want)
 
 
-@pytest.mark.parametrize("transport", ["thread", "filempi"])
+@pytest.mark.parametrize("transport", TRANSPORTS)
 def test_cached_equals_cold(transport, tmp_path):
     """The memoized plan must move byte-identical data to a cold build."""
     shape = (11, 13, 6)
@@ -103,12 +99,10 @@ def test_cached_equals_cold(transport, tmp_path):
     outs = {}
     for use_cache in (False, True):
         args = (shape, spec_a, spec_b, use_cache)
-        if transport == "thread":
-            res = run_spmd(roundtrip_body, 4, args=args)
-        else:
-            sub = tmp_path / f"cache{use_cache}"
-            sub.mkdir()
-            res = run_filempi_spmd(lambda: roundtrip_body(*args), 4, sub)
+        sub = tmp_path / f"cache{use_cache}"
+        sub.mkdir()
+        res = run_transport_spmd(roundtrip_body, 4, transport,
+                                 comm_dir=sub, args=args)
         outs[use_cache] = res[0]
     np.testing.assert_array_equal(outs[False], outs[True])
 

@@ -1,0 +1,372 @@
+"""SocketComm + rendezvous bootstrap: the shared-filesystem-free stack.
+
+Transport-specific behavior (the generic send/recv/collective matrix
+lives in test_comm_async/test_collectives/test_redist): both rendezvous
+backends, ``SocketComm.bootstrap``, ``PPYTHON_TRANSPORT`` wiring in
+``init()``/pRUN/slurm, call-time ``PPYTHON_RECV_TIMEOUT``, and the pRUN
+scratch-dir lifecycle.
+"""
+
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.comm import SocketComm, StragglerTimeout, recv_timeout, set_context
+from repro.comm.rendezvous import (
+    advertised_host,
+    bind_listener,
+    exchange_endpoints,
+    parse_addr,
+    rendezvous_file,
+    rendezvous_tcp,
+)
+from repro.comm.testing import run_transport_spmd
+
+
+def _free_port() -> int:
+    s = bind_listener("127.0.0.1")
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def _threaded(np_, body):
+    """Run ``body(pid)`` on np_ threads; rank-ordered results, first
+    exception re-raised."""
+    results = [None] * np_
+    errors = [None] * np_
+
+    def run(pid):
+        try:
+            results[pid] = body(pid)
+        except BaseException as e:  # noqa: BLE001
+            errors[pid] = e
+
+    ts = [threading.Thread(target=run, args=(p,)) for p in range(np_)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(30)
+    for e in errors:
+        if e is not None:
+            raise e
+    return results
+
+
+# ---------------------------------------------------------------------------
+# rendezvous backends
+# ---------------------------------------------------------------------------
+
+
+class TestRendezvous:
+    def test_parse_addr(self):
+        assert parse_addr("node17:29400") == ("node17", 29400)
+        with pytest.raises(ValueError):
+            parse_addr("29400")
+
+    def test_advertised_host_env_override(self, monkeypatch):
+        monkeypatch.setenv("PPYTHON_HOST", "10.1.2.3")
+        assert advertised_host() == "10.1.2.3"
+
+    @pytest.mark.parametrize("np_", [2, 5])
+    def test_tcp_rendezvous_all_ranks_get_same_table(self, np_):
+        addr = f"127.0.0.1:{_free_port()}"
+        tables = _threaded(
+            np_,
+            lambda pid: rendezvous_tcp(
+                np_, pid, ("127.0.0.1", 9000 + pid), addr, timeout=20
+            ),
+        )
+        want = [("127.0.0.1", 9000 + r) for r in range(np_)]
+        assert all(t == want for t in tables)
+
+    def test_tcp_rendezvous_times_out_on_missing_rank(self):
+        addr = f"127.0.0.1:{_free_port()}"
+        with pytest.raises(StragglerTimeout, match="rendezvous"):
+            rendezvous_tcp(2, 0, ("127.0.0.1", 9000), addr, timeout=0.5)
+
+    def test_tcp_rendezvous_survives_silent_stray_connection(self):
+        """A connection that never registers (rank dying mid-dial, port
+        scanner) must cost the server seconds, not the whole deadline —
+        real ranks queued behind it still complete."""
+        import socket as socket_mod
+        import time
+
+        port = _free_port()
+        addr = f"127.0.0.1:{port}"
+        results = {}
+
+        def rank(pid):
+            results[pid] = rendezvous_tcp(
+                2, pid, ("127.0.0.1", 9100 + pid), addr, timeout=20
+            )
+
+        t0 = threading.Thread(target=rank, args=(0,))
+        t0.start()
+        time.sleep(0.3)  # let the server come up
+        stray = socket_mod.socket()
+        stray.connect(("127.0.0.1", port))  # HELLO never comes
+        time.sleep(0.2)
+        t1 = threading.Thread(target=rank, args=(1,))
+        t1.start()
+        t0.join(25)
+        t1.join(25)
+        stray.close()
+        want = [("127.0.0.1", 9100), ("127.0.0.1", 9101)]
+        assert results.get(0) == want and results.get(1) == want
+
+    def test_file_rendezvous(self, tmp_path):
+        tables = _threaded(
+            3,
+            lambda pid: rendezvous_file(
+                3, pid, ("127.0.0.1", 7000 + pid), tmp_path, timeout=20
+            ),
+        )
+        want = [("127.0.0.1", 7000 + r) for r in range(3)]
+        assert all(t == want for t in tables)
+
+    def test_file_rendezvous_dir_is_reusable(self, tmp_path):
+        """Regression: leftover ep_* files must not serve a later run a
+        stale endpoint table — the exchange reclaims its files once every
+        rank has read the table."""
+        for run in range(2):
+            tables = _threaded(
+                2,
+                lambda pid: rendezvous_file(
+                    2, pid, ("127.0.0.1", 7100 + 10 * run + pid),
+                    tmp_path, timeout=20,
+                ),
+            )
+            want = [("127.0.0.1", 7100 + 10 * run + r) for r in range(2)]
+            assert all(t == want for t in tables), (run, tables)
+        assert not list(tmp_path.iterdir())  # fully reclaimed
+
+    def test_exchange_dispatch_prefers_tcp_addr(self, tmp_path, monkeypatch):
+        # with both configured, the TCP server wins (the no-shared-FS path)
+        addr = f"127.0.0.1:{_free_port()}"
+        monkeypatch.setenv("PPYTHON_RDZV_ADDR", addr)
+        monkeypatch.setenv("PPYTHON_RDZV_DIR", str(tmp_path))
+        tables = _threaded(
+            2,
+            lambda pid: exchange_endpoints(
+                2, pid, ("127.0.0.1", 8000 + pid), timeout=20
+            ),
+        )
+        assert tables[0] == [("127.0.0.1", 8000), ("127.0.0.1", 8001)]
+        assert not list(tmp_path.glob("ep_*"))  # file backend never touched
+
+    def test_exchange_requires_some_rendezvous(self, monkeypatch):
+        for var in ("PPYTHON_RDZV_ADDR", "PPYTHON_RDZV_DIR",
+                    "PPYTHON_COMM_DIR"):
+            monkeypatch.delenv(var, raising=False)
+        with pytest.raises(ValueError, match="PPYTHON_RDZV_ADDR"):
+            exchange_endpoints(2, 0, ("127.0.0.1", 1))
+
+
+# ---------------------------------------------------------------------------
+# bootstrap + init() wiring
+# ---------------------------------------------------------------------------
+
+
+class TestBootstrap:
+    @pytest.mark.parametrize("mode", ["tcp", "file"])
+    def test_bootstrap_then_message(self, mode, tmp_path, monkeypatch):
+        monkeypatch.setenv("PPYTHON_HOST", "127.0.0.1")
+        kw = (
+            {"rdzv_addr": f"127.0.0.1:{_free_port()}"}
+            if mode == "tcp"
+            else {"rdzv_dir": tmp_path}
+        )
+
+        def body(pid):
+            ctx = SocketComm.bootstrap(np_=3, pid=pid, timeout=20, **kw)
+            set_context(ctx)
+            try:
+                from repro.comm import world_group
+
+                out = world_group(ctx).allgather(pid * 11)
+            finally:
+                set_context(None)
+                ctx.finalize()
+            return out
+
+        assert _threaded(3, body) == [[0, 11, 22]] * 3
+
+    def test_init_selects_socket_transport(self, tmp_path, monkeypatch):
+        """Real processes through init(): PPYTHON_TRANSPORT=socket + a
+        rendezvous dir is all the env wiring a rank needs — and the
+        rendezvous dir is only the bootstrap channel, never a message
+        path (asserted: no .buf message files appear)."""
+        import subprocess
+        import sys
+
+        code = (
+            "import numpy as np, os, sys\n"
+            "from repro.comm import init\n"
+            "ctx = init()\n"
+            "assert type(ctx).__name__ == 'SocketComm', type(ctx)\n"
+            "if ctx.pid == 0:\n"
+            "    ctx.send(1, 'x', np.arange(8))\n"
+            "else:\n"
+            "    s = int(ctx.recv(0, 'x', timeout=30).sum())\n"
+            "    open(sys.argv[1], 'w').write(str(s))\n"
+            "ctx.finalize()\n"
+        )
+        out = tmp_path / "result.txt"
+        env = dict(
+            os.environ,
+            PPYTHON_TRANSPORT="socket",
+            PPYTHON_NP="2",
+            PPYTHON_RDZV_DIR=str(tmp_path / "rdzv"),
+            PPYTHON_HOST="127.0.0.1",
+        )
+        procs = [
+            subprocess.Popen(
+                [sys.executable, "-c", code, str(out)],
+                env=dict(env, PPYTHON_PID=str(pid)),
+            )
+            for pid in range(2)
+        ]
+        assert [p.wait(timeout=60) for p in procs] == [0, 0]
+        assert out.read_text() == "28"
+        assert not list((tmp_path / "rdzv").glob("*.buf"))
+
+    def test_init_single_rank_is_localcomm(self, monkeypatch):
+        from repro.comm import context as ctx_mod
+
+        monkeypatch.setenv("PPYTHON_TRANSPORT", "socket")
+        monkeypatch.setenv("PPYTHON_NP", "1")
+        assert ctx_mod.init().np_ == 1
+
+    def test_init_rejects_thread_transport_and_unknown(self, monkeypatch):
+        from repro.comm import context as ctx_mod
+
+        monkeypatch.setenv("PPYTHON_NP", "2")
+        monkeypatch.setenv("PPYTHON_PID", "0")
+        monkeypatch.setenv("PPYTHON_TRANSPORT", "thread")
+        with pytest.raises(ValueError, match="run_spmd"):
+            ctx_mod.init()
+        monkeypatch.setenv("PPYTHON_TRANSPORT", "carrier-pigeon")
+        with pytest.raises(ValueError, match="carrier-pigeon"):
+            ctx_mod.init()
+
+    def test_run_transport_spmd_rejects_unknown(self):
+        with pytest.raises(ValueError, match="unknown transport"):
+            run_transport_spmd(lambda: None, 2, "smoke-signals")
+
+
+# ---------------------------------------------------------------------------
+# satellite: PPYTHON_RECV_TIMEOUT read at call time
+# ---------------------------------------------------------------------------
+
+
+class TestRecvTimeoutKnob:
+    def test_env_read_at_call_time(self, monkeypatch):
+        monkeypatch.delenv("PPYTHON_RECV_TIMEOUT", raising=False)
+        assert recv_timeout() == 300.0
+        monkeypatch.setenv("PPYTHON_RECV_TIMEOUT", "0.25")
+        assert recv_timeout() == 0.25  # no re-import needed
+
+    def test_default_recv_deadline_follows_env(self, monkeypatch):
+        """A default-timeout recv must honor a per-run override — the old
+        import-time constant ignored it."""
+        import time
+
+        monkeypatch.setenv("PPYTHON_RECV_TIMEOUT", "0.2")
+
+        def body():
+            from repro.comm import get_context
+
+            ctx = get_context()
+            if ctx.pid == 1:
+                t0 = time.monotonic()
+                with pytest.raises(StragglerTimeout):
+                    ctx.recv(0, "never")  # default timeout ← env
+                return time.monotonic() - t0
+            return 0.0
+
+        took = run_transport_spmd(body, 2, "socket")[1]
+        assert took < 5.0  # 300 s default would blow the test budget
+
+
+# ---------------------------------------------------------------------------
+# satellite: pRUN scratch-dir lifecycle + transport plumbing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+class TestPRunTransports:
+    def test_socket_processes_end_to_end(self):
+        from repro.launch import pRUN
+
+        res = pRUN("repro.launch._selftest:pingpong", 2, transport="socket",
+                   timeout=120)
+        assert res[0] == np.arange(1000.0).sum() * 2
+
+    def test_thread_transport_runs_in_process(self):
+        from repro.launch import pRUN
+
+        res = pRUN("repro.launch._selftest:bcast_barrier", 3,
+                   transport="thread")
+        assert res == [7.0 * 64] * 3
+
+    def test_thread_transport_rejects_scripts(self, tmp_path):
+        from repro.launch import pRUN
+
+        script = tmp_path / "s.py"
+        script.write_text("print('hi')\n")
+        with pytest.raises(ValueError, match="module:function"):
+            pRUN(str(script), 2, transport="thread")
+
+    def test_socket_rejects_restarts(self):
+        from repro.launch import pRUN
+
+        with pytest.raises(ValueError, match="rendezvous"):
+            pRUN("repro.launch._selftest:pingpong", 2, transport="socket",
+                 restarts=1)
+
+    def test_scratch_dir_removed_on_success_kept_on_failure(self, capsys):
+        import glob
+        import shutil
+        import tempfile
+
+        from repro.launch import pRUN
+
+        tmp = tempfile.gettempdir()  # mkdtemp honors TMPDIR; so must we
+        before = set(glob.glob(os.path.join(tmp, "ppython_*")))
+        res = pRUN("repro.launch._selftest:pingpong", 2, timeout=120)
+        assert res[0] == np.arange(1000.0).sum() * 2
+        assert set(glob.glob(os.path.join(tmp, "ppython_*"))) == before
+
+        try:
+            with pytest.raises(RuntimeError, match="exited with code"):
+                pRUN("repro.launch._selftest:does_not_exist", 2, timeout=120)
+            leaked = set(glob.glob(os.path.join(tmp, "ppython_*"))) - before
+            assert len(leaked) == 1  # kept for post-mortem, and said so
+            assert "post-mortem" in capsys.readouterr().err
+        finally:
+            for d in set(glob.glob(os.path.join(tmp, "ppython_*"))) - before:
+                shutil.rmtree(d, ignore_errors=True)
+
+
+class TestSlurmSocketTemplate:
+    def test_socket_script_has_rendezvous_no_comm_dir(self):
+        from repro.launch.slurm import slurm_script
+
+        txt = slurm_script("repro.launch._selftest:pingpong", 64,
+                           transport="socket", nodes=4, rdzv_port=29777)
+        assert "PPYTHON_TRANSPORT=socket" in txt
+        assert "scontrol show hostnames" in txt
+        assert ":29777" in txt
+        assert "PPYTHON_COMM_DIR" not in txt  # no shared FS anywhere
+        assert "PPYTHON_PID=\\$SLURM_PROCID" in txt
+
+    def test_file_script_still_needs_comm_dir(self):
+        from repro.launch.slurm import slurm_script
+
+        txt = slurm_script("x:y", 4, "/shared/comm")
+        assert "PPYTHON_COMM_DIR=/shared/comm" in txt
+        with pytest.raises(ValueError, match="shared filesystem"):
+            slurm_script("x:y", 4, transport="file")
