@@ -1,0 +1,37 @@
+"""Shared bench-JSON artifact helper.
+
+Every benchmark that persists results (`pingpong.py` -> BENCH_comm.json,
+`redist_bench.py` -> BENCH_redist.json, `hpcc.py` -> BENCH_hpcc.json)
+writes through this module, so the committed artifacts share one shape:
+
+    {"bench": <name>, "rows": [<row>, ...], <summary key>: <value>, ...}
+
+Rows are flat dicts (one measured cell each); summary keys carry the
+headline numbers acceptance bars read.  Keeping the writer in one place
+means a new benchmark cannot invent a divergent artifact layout, and the
+reader side (CI checks, the perf-trajectory tooling) parses every
+BENCH_*.json the same way.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any
+
+__all__ = ["bench_record", "write_bench_json"]
+
+
+def bench_record(bench: str, rows: list[dict], **summary: Any) -> dict:
+    """Assemble the canonical artifact dict for one benchmark run."""
+    record: dict[str, Any] = {"bench": bench, "rows": rows}
+    record.update(summary)
+    return record
+
+
+def write_bench_json(path: str, record: dict) -> None:
+    """Write an artifact produced by :func:`bench_record` (atomic enough
+    for single-writer benchmarks; newline-terminated for clean diffs)."""
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    print(f"wrote {path}")

@@ -25,7 +25,6 @@ Usage::
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -165,18 +164,41 @@ def main() -> int:
         else [args.transport]
     nps = [int(x) for x in args.nps.split(",") if x]
     sizes = [int(x) for x in args.sizes.split(",") if x]
+    if args.check:
+        # a partial sweep must never be blessed: the full transport x np
+        # matrix (with small-message cells) has to be on the command line
+        # before anything is measured or written
+        missing = [t for t in TRANSPORTS if t not in transports]
+        if missing or any(n not in nps for n in (2, 4)) or not any(
+                s <= SMALL_MSG_BYTES for s in sizes):
+            print(
+                "FAIL: --check requires the full sweep — all transports "
+                f"({'/'.join(TRANSPORTS)}), np 2 and 4, and at least one "
+                f"size <= {SMALL_MSG_BYTES} B; got transports="
+                f"{transports}, np={nps}, sizes={sizes}",
+                file=sys.stderr,
+            )
+            return 1
     rows = sweep(transports, nps, sizes, iters=args.iters or None)
+    expected = {(t, n, s) for t in transports for n in nps for s in sizes}
+    produced = {(r["transport"], r["np"], r["nbytes"]) for r in rows}
+    if args.check and expected - produced:
+        print(f"FAIL: sweep incomplete, missing cells: "
+              f"{sorted(expected - produced)}", file=sys.stderr)
+        return 1
     ratio = small_message_speedup(rows)
-    summary = {
-        "bench": "pingpong",
-        "rows": rows,
-        "socket_vs_file_small_msg_speedup_np4": (
+    try:
+        from benchmarks.bench_json import bench_record, write_bench_json
+    except ImportError:  # invoked as a script: benchmarks/ is sys.path[0]
+        from bench_json import bench_record, write_bench_json
+    write_bench_json(args.out, bench_record(
+        "pingpong",
+        rows,
+        socket_vs_file_small_msg_speedup_np4=(
             round(ratio, 2) if ratio else None
         ),
-    }
-    with open(args.out, "w") as f:
-        json.dump(summary, f, indent=2)
-    print(f"\nwrote {args.out}")
+        sweep={"transports": transports, "nps": nps, "sizes": sizes},
+    ))
     if ratio is not None:
         print(f"socket vs file small-message (<= {SMALL_MSG_BYTES} B) "
               f"round-trip speedup at np=4: {ratio:.1f}x "

@@ -29,11 +29,13 @@ from .context import (
     LocalComm,
     Np,
     Pid,
+    RecvIntoRequest,
     Request,
     StragglerTimeout,
     ctx_counter,
     get_context,
     init,
+    land_into,
     recv_timeout,
     set_context,
 )
@@ -48,8 +50,10 @@ __all__ = [
     "SocketComm",
     "ThreadComm",
     "Group",
+    "RecvIntoRequest",
     "Request",
     "StragglerTimeout",
+    "land_into",
     "ctx_counter",
     "group_of",
     "world_group",

@@ -12,6 +12,10 @@ MPI_Init                ``init()`` — transport picked by
 MPI_Comm_size / _rank   ``.np_`` / ``.pid``
 MPI_Send / MPI_Recv     ``.send`` / ``.recv`` (plus ``isend``/``irecv``/
                         ``wait_all`` non-blocking requests)
+MPI_Irecv(buf)          ``.irecv_into`` — receive *into* caller memory;
+                        serializing transports decode payload bytes
+                        directly into the buffer (redistribution lands
+                        coalesced blocks straight in ``dst.local``)
 MPI_Bcast               ``.bcast``      — binomial tree / chunked ring /
                                           one-file on FileMPI, frozen-
                                           buffer tree on ThreadComm
@@ -45,15 +49,19 @@ import threading
 import time
 from typing import Any
 
+import numpy as np
+
 __all__ = [
     "CommContext",
     "LocalComm",
     "Request",
     "SendRequest",
     "RecvRequest",
+    "RecvIntoRequest",
     "StragglerTimeout",
     "ctx_counter",
     "get_context",
+    "land_into",
     "set_context",
     "init",
     "recv_timeout",
@@ -156,6 +164,70 @@ class RecvRequest(Request):
         return self._value
 
 
+def land_into(buffer: np.ndarray, payload: Any) -> np.ndarray:
+    """Materialize a received ndarray ``payload`` into the caller-owned
+    ``buffer`` (the completion step of ``irecv_into``).
+
+    Element counts must match; the payload is reshaped to the buffer's
+    shape and copied with assignment-casting semantics, so a sender using
+    a different-but-castable dtype still lands.  Two fast paths: a
+    payload a transport already reconstructed *over* the buffer's memory
+    (same data pointer, dtype, contiguity) returns immediately, and a
+    payload that merely overlaps the buffer (e.g. raw bytes landed under
+    a mismatched dtype) is defensively copied before the casting
+    assignment so the overlap can't corrupt it mid-copy.
+    """
+    if not isinstance(payload, np.ndarray):
+        raise TypeError(
+            f"irecv_into expects ndarray traffic, got {type(payload)}"
+        )
+    if payload.size != buffer.size:
+        raise ValueError(
+            f"irecv_into buffer holds {buffer.size} elements but the "
+            f"payload carries {payload.size}"
+        )
+    if (payload.dtype == buffer.dtype
+            and payload.__array_interface__["data"][0]
+            == buffer.__array_interface__["data"][0]
+            and payload.flags["C_CONTIGUOUS"]
+            and buffer.flags["C_CONTIGUOUS"]):
+        return buffer  # transport decoded the payload in place
+    if np.may_share_memory(payload, buffer):
+        payload = payload.copy()
+    buffer[...] = payload.reshape(buffer.shape)
+    return buffer
+
+
+class RecvIntoRequest(Request):
+    """Generic ``irecv_into`` handle: completes an inner receive request,
+    then lands the payload into the caller's buffer exactly once.
+
+    Transports with a cheaper route to caller memory (FileMPI decoding a
+    frame straight into the buffer, SocketComm pre-registering it with
+    the wire reader) override ``irecv_into`` with their own requests;
+    this wrapper is the contract's universal fallback and the whole
+    implementation for the by-reference transports, where the copy out
+    of the sender's posted array is required anyway.
+    """
+
+    def __init__(self, inner: Request, buffer: np.ndarray):
+        self._inner = inner
+        self._buffer = buffer
+        self._done = False
+
+    def test(self) -> bool:
+        if not self._done and self._inner.test():
+            land_into(self._buffer, self._inner.wait(timeout=0.0))
+            self._done = True
+        return self._done
+
+    def wait(self, timeout: float | None = None) -> np.ndarray:
+        if not self._done:
+            land_into(self._buffer, self._inner.wait(timeout=timeout))
+            self._done = True
+        return self._buffer
+
+
 class CommContext:
     """Abstract SPMD communication context."""
 
@@ -190,6 +262,21 @@ class CommContext:
     def irecv(self, source: int, tag: Any) -> Request:
         """Post a receive; complete it later with ``wait()``/``test()``."""
         return RecvRequest(self, source, tag)
+
+    def irecv_into(self, source: int, tag: Any,
+                   buffer: np.ndarray) -> Request:
+        """Post a receive that completes *into* a caller-owned buffer.
+
+        ``buffer`` is a writable ndarray (any shape) whose element count
+        matches the incoming array payload; ``wait()`` returns the
+        buffer.  The default lands via :func:`land_into` after a plain
+        ``irecv``; serializing transports override this to decode the
+        payload bytes directly into ``buffer`` with no intermediate
+        allocation, which is what lets redistribution receive coalesced
+        blocks straight into plan staging — or into ``dst.local``
+        itself.
+        """
+        return RecvIntoRequest(self.irecv(source, tag), buffer)
 
     @staticmethod
     def wait_all(requests, timeout: float | None = None) -> list:

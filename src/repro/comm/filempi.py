@@ -25,12 +25,21 @@ from __future__ import annotations
 
 import mmap
 import os
+import pickle
 import threading
 import time
 from pathlib import Path
 from typing import Any
 
-from .context import CommContext, Request, StragglerTimeout, recv_timeout
+import numpy as np
+
+from .context import (
+    CommContext,
+    Request,
+    StragglerTimeout,
+    land_into as _land_into,
+    recv_timeout,
+)
 from .frame import (
     FLAG_CHUNKED as _FLAG_CHUNKED,
     ChunkHeader as _ChunkHeader,
@@ -38,6 +47,7 @@ from .frame import (
     encode_frame as _encode_frame,
     max_msg_bytes as _max_msg_bytes,
     read_footer as _read_footer,
+    read_trailer as _read_trailer,
     tag_token as _tag_token,
 )
 
@@ -66,9 +76,13 @@ class _FileRecvRequest(Request):
         self._done = False
         self._value: Any = None
 
+    def _claim(self) -> Any:
+        """One non-blocking claim attempt (into-variant overrides)."""
+        return self._ctx._try_claim(self._source, self._tag, self._seq)
+
     def test(self) -> bool:
         if not self._done:
-            got = self._ctx._try_claim(self._source, self._tag, self._seq)
+            got = self._claim()
             if got is not _NOT_READY:
                 self._value = got
                 self._done = True
@@ -95,6 +109,22 @@ class _FileRecvRequest(Request):
 
 
 _NOT_READY = object()
+
+
+class _FileRecvIntoRequest(_FileRecvRequest):
+    """Receive handle that decodes the claimed frame *into* a caller
+    buffer — ``_FileRecvRequest`` with only the claim step overridden
+    (the poll/backoff/straggler machinery is shared)."""
+
+    def __init__(self, ctx: "FileMPI", source: int, tag: Any, seq: int,
+                 buffer: np.ndarray):
+        super().__init__(ctx, source, tag, seq)
+        self._buffer = buffer
+
+    def _claim(self) -> Any:
+        return self._ctx._try_claim_into(
+            self._source, self._tag, self._seq, self._buffer
+        )
 
 
 class FileMPI(CommContext):
@@ -250,6 +280,63 @@ class FileMPI(CommContext):
         seq = self._recv_seq.get(key, 0)
         self._recv_seq[key] = seq + 1  # reserve the stream slot now
         return _FileRecvRequest(self, source, tag, seq)
+
+    def _try_claim_into(self, source: int, tag: Any, seq: int,
+                        buffer: np.ndarray) -> Any:
+        """One non-blocking claim attempt that lands the payload in
+        ``buffer``.
+
+        When the published frame is a single-ndarray message whose raw
+        bytes match the buffer exactly, those bytes are ``readinto`` the
+        buffer and the pickle head reconstructs the array over the
+        caller's memory — the message never touches an intermediate
+        allocation.  Chunked headers, multi-buffer payloads, size or
+        contiguity mismatches fall back to the general claim followed by
+        a casting copy (``land_into``), so the contract always holds.
+        """
+        path = self._msg_path(source, self.pid, tag, seq)
+        if not path.exists():
+            return _NOT_READY
+        trailer = _read_trailer(path)
+        fast = (
+            trailer is not None
+            and not trailer[2] & _FLAG_CHUNKED
+            and len(trailer[1]) == 1
+            and buffer.flags["C_CONTIGUOUS"]
+            and trailer[1][0] == buffer.nbytes
+        )
+        if not fast:
+            got = self._try_claim(source, tag, seq)
+            if got is _NOT_READY:
+                return _NOT_READY
+            return _land_into(buffer, got)
+        head_len = trailer[0]
+        mv = memoryview(buffer).cast("B")
+        try:
+            with open(path, "rb") as f:
+                head = f.read(head_len)
+                got = 0
+                while got < len(mv):
+                    n = f.readinto(mv[got:])
+                    if not n:
+                        break
+                    got += n
+        except FileNotFoundError:  # lost a race with another local thread
+            return _NOT_READY
+        if len(head) != head_len or got != len(mv):
+            return _NOT_READY  # torn read: retry on the next poll
+        obj = pickle.loads(head, buffers=[mv])
+        os.unlink(path)
+        return _land_into(buffer, obj)
+
+    def irecv_into(self, source: int, tag: Any,
+                   buffer: np.ndarray) -> Request:
+        if not (0 <= source < self.np_):
+            raise ValueError(f"source {source} out of range for np={self.np_}")
+        key = (source, _tag_token(tag))
+        seq = self._recv_seq.get(key, 0)
+        self._recv_seq[key] = seq + 1  # reserve the stream slot now
+        return _FileRecvIntoRequest(self, source, tag, seq, buffer)
 
     def probe(self, source: int, tag: Any) -> bool:
         """True only when the next message is *fully* claimable — for a

@@ -36,6 +36,7 @@ __all__ = [
     "max_msg_bytes",
     "oob_buffers",
     "read_footer",
+    "read_trailer",
     "tag_token",
 ]
 
@@ -95,6 +96,29 @@ def read_footer(path: Path) -> tuple[int, int, int] | None:
     if magic != MAGIC:
         return None
     return head_len, nbuf, flags
+
+
+def read_trailer(path: Path) -> tuple[int, tuple[int, ...], int] | None:
+    """(head_len, per-buffer byte lengths, flags) from a published frame
+    file's trailing bytes, or None if the file vanished or is not a
+    valid frame.
+
+    This is the receive-into planning read: knowing every out-of-band
+    buffer's length (not just the count the footer carries) lets a
+    receiver decide — before touching the payload — whether the raw
+    bytes can be streamed straight into a caller-owned buffer.
+    """
+    try:
+        with open(path, "rb") as f:
+            f.seek(-FOOT.size, os.SEEK_END)
+            head_len, nbuf, flags, magic = FOOT.unpack(f.read(FOOT.size))
+            if magic != MAGIC:
+                return None
+            f.seek(-(FOOT.size + 8 * nbuf), os.SEEK_END)
+            lens = struct.unpack(f"<{nbuf}Q", f.read(8 * nbuf))
+    except (FileNotFoundError, OSError, struct.error):
+        return None
+    return head_len, lens, flags
 
 
 def decode_frame(buf) -> Any:

@@ -53,7 +53,15 @@ import threading
 import time
 from typing import Any
 
-from .context import CommContext, Request, StragglerTimeout, recv_timeout
+import numpy as np
+
+from .context import (
+    CommContext,
+    Request,
+    StragglerTimeout,
+    land_into as _land_into,
+    recv_timeout,
+)
 from .frame import (
     decode_frame,
     encode_frame,
@@ -109,6 +117,55 @@ class _SocketRecvRequest(Request):
         return self._value
 
 
+class _SocketRecvIntoRequest(Request):
+    """Receive handle bound to a reserved (source, tag, seq) slot that
+    completes into a caller buffer.
+
+    The buffer was pre-registered with the wire reader at post time; if
+    the reader matched it, the payload already sits in caller memory and
+    ``land_into`` is a no-op.  If the message raced ahead of the post
+    (or didn't match), the payload is landed with a copy and the stale
+    registration is dropped.
+    """
+
+    def __init__(self, ctx: "SocketComm", source: int, tag: Any, seq: int,
+                 buffer: np.ndarray):
+        self._ctx = ctx
+        self._key = (source, tag_token(tag), seq)
+        self._tag = tag
+        self._buffer = buffer
+        self._done = False
+
+    def _finish(self, payload: Any) -> None:
+        self._ctx._drop_registration(self._key)
+        _land_into(self._buffer, payload)
+        self._done = True
+
+    def test(self) -> bool:
+        if not self._done:
+            got = self._ctx._mail.take_nowait(self._key)
+            if got is not _MISSING:
+                self._finish(got)
+        return self._done
+
+    def wait(self, timeout: float | None = None) -> Any:
+        if not self._done:
+            try:
+                got = self._ctx._take(
+                    self._key, self._tag,
+                    recv_timeout() if timeout is None else timeout,
+                )
+            except StragglerTimeout:
+                # the caller is about to give up on this receive: drop
+                # the registration so a late-arriving message decodes
+                # into its own fresh buffer instead of being recv_into'd
+                # over caller memory the application may have moved on to
+                self._ctx._drop_registration(self._key)
+                raise
+            self._finish(got)
+        return self._buffer
+
+
 class SocketComm(CommContext):
     """TCP rank endpoint over a rendezvous-exchanged peer table.
 
@@ -144,6 +201,12 @@ class SocketComm(CommContext):
         # matching table: (src, tag_token, seq) -> decoded payload, with
         # per-key targeted wakeups (reused from ThreadComm's fabric)
         self._mail = ThreadWorld(np_)
+        # irecv_into pre-registrations: (src, tag_token, seq) -> caller
+        # buffer the wire reader should recv_into directly.  Guarded by
+        # its own lock; a registration that loses the race with an
+        # already-decoded message is dropped at request completion.
+        self._recv_into_bufs: dict[tuple, np.ndarray] = {}
+        self._reg_lock = threading.Lock()
         self._peers: dict[int, socket.socket] = {}
         self._peer_locks: dict[int, threading.Lock] = {}
         self._peers_guard = threading.Lock()
@@ -361,12 +424,28 @@ class SocketComm(CommContext):
                     tok = bytes(self._read_new(conn, tag_len)).decode()
                     head = self._read_new(conn, head_len)
                     if kind == _K_MSG:
-                        # each raw buffer lands in its own fresh writable
-                        # buffer via recv_into; pickle reconstructs arrays
-                        # over those bytes — zero re-copy on receive
-                        bufs = [self._read_new(conn, n) for n in lens]
-                        obj = pickle.loads(head, buffers=bufs)
-                        self._mail.post((src, tok, seq), obj)
+                        # single-buffer payloads matching a pre-registered
+                        # irecv_into buffer are recv_into'd straight into
+                        # the caller's memory; everything else lands in
+                        # its own fresh writable buffer via recv_into and
+                        # pickle reconstructs arrays over those bytes —
+                        # zero re-copy on receive either way
+                        key = (src, tok, seq)
+                        target = None
+                        if nbuf == 1:
+                            with self._reg_lock:
+                                reg = self._recv_into_bufs.get(key)
+                                if (reg is not None
+                                        and reg.nbytes == lens[0]):
+                                    target = self._recv_into_bufs.pop(key)
+                        if target is not None:
+                            mv = memoryview(target).cast("B")
+                            self._read_into(conn, mv)
+                            obj = pickle.loads(head, buffers=[mv])
+                        else:
+                            bufs = [self._read_new(conn, n) for n in lens]
+                            obj = pickle.loads(head, buffers=bufs)
+                        self._mail.post(key, obj)
                         continue
                     if kind != _K_CHUNK:
                         raise ValueError(f"unknown record kind {kind}")
@@ -421,6 +500,29 @@ class SocketComm(CommContext):
         seq = self._recv_seq.get(key, 0)
         self._recv_seq[key] = seq + 1  # reserve the stream slot now
         return _SocketRecvRequest(self, source, tag, seq)
+
+    def _drop_registration(self, key: tuple) -> None:
+        with self._reg_lock:
+            self._recv_into_bufs.pop(key, None)
+
+    def irecv_into(self, source: int, tag: Any,
+                   buffer: np.ndarray) -> Request:
+        """Post a receive completing into ``buffer``; when the buffer is
+        C-contiguous it is registered with the wire reader, which
+        ``recv_into``\\ s the payload bytes straight off the socket into
+        the caller's memory (no intermediate allocation).  Non-contiguous
+        buffers, chunked payloads, and messages that arrived before the
+        post land through the generic copy instead."""
+        if not (0 <= source < self.np_):
+            raise ValueError(f"source {source} out of range for np={self.np_}")
+        key = (source, tag_token(tag))
+        seq = self._recv_seq.get(key, 0)
+        self._recv_seq[key] = seq + 1  # reserve the stream slot now
+        mkey = (source, key[1], seq)
+        if buffer.flags["C_CONTIGUOUS"] and not self._mail.peek(mkey):
+            with self._reg_lock:
+                self._recv_into_bufs[mkey] = buffer
+        return _SocketRecvIntoRequest(self, source, tag, seq, buffer)
 
     def probe(self, source: int, tag: Any) -> bool:
         key = (source, tag_token(tag))

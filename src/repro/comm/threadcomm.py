@@ -121,6 +121,12 @@ class ThreadComm(CommContext):
     must therefore either stop mutating after posting or send an explicit
     copy — exactly MPI's "don't touch the buffer until the send completes"
     contract, except completion here is the matching receive.
+
+    ``irecv_into`` (inherited from :class:`CommContext`) completes by
+    copying the posted array into the caller's buffer — on a by-reference
+    transport that copy *is* the pin that detaches the receiver from the
+    sender's memory, so the generic implementation is already optimal
+    here.
     """
 
     # tells the collectives layer that posted objects alias the sender's

@@ -11,8 +11,10 @@ from .dmat import Dmat, redistribute
 from .redist import (
     RedistPlan,
     clear_plan_cache,
+    exec_stats,
     get_plan,
     plan_cache_stats,
+    reset_exec_stats,
 )
 from .ops import (
     agg,
@@ -57,6 +59,8 @@ __all__ = [
     "RedistPlan",
     "get_plan",
     "plan_cache_stats",
+    "exec_stats",
+    "reset_exec_stats",
     "clear_plan_cache",
     "FALLS",
     "falls_indices",

@@ -248,33 +248,39 @@ class Dmat:
             raise TypeError(f"cannot assign {type(value)} to Dmat")
 
     def _region_local(self, region):
-        """Per-dim (local positions, global indices) of owned ∩ region."""
-        pos, gidx = [], []
+        """Per-dim (local slice, global indices) of owned ∩ region.
+
+        Owned indices are stored sorted, so the local positions covering
+        a contiguous global window are always a contiguous ``arange`` —
+        returned as a basic *slice* so consumers index the local buffer
+        with views instead of fancy-index temporaries.
+        """
+        slices, gidx = [], []
         for d, (start, stop) in enumerate(region):
             owned = self._owned[d]
-            lo = np.searchsorted(owned, start)
-            hi = np.searchsorted(owned, stop)
-            pos.append(np.arange(lo, hi))
+            lo = int(np.searchsorted(owned, start))
+            hi = int(np.searchsorted(owned, stop))
+            slices.append(slice(lo, hi))
             gidx.append(owned[lo:hi])
-        return pos, gidx
+        return slices, gidx
 
     def _fill_region(self, region, scalar) -> None:
-        pos, _ = self._region_local(region)
-        if all(len(p) for p in pos):
-            self.local[np.ix_(*pos)] = scalar
+        slices, _ = self._region_local(region)
+        if all(s.stop > s.start for s in slices):
+            self.local[tuple(slices)] = scalar
 
     def _assign_global_array(self, region, arr: np.ndarray) -> None:
         rshape = tuple(stop - start for start, stop in region)
         if arr.shape != rshape:
             raise ValueError(f"value shape {arr.shape} != region shape {rshape}")
-        pos, gidx = self._region_local(region)
-        if all(len(p) for p in pos):
+        slices, gidx = self._region_local(region)
+        if all(s.stop > s.start for s in slices):
             take = np.ix_(*[g - start for g, (start, _) in zip(gidx, region)])
-            self.local[np.ix_(*pos)] = arr[take]
+            self.local[tuple(slices)] = arr[take]
 
     def __getitem__(self, key):
         region = _parse_region(key, self.shape)
-        pos, gidx = self._region_local(region)
+        slices, gidx = self._region_local(region)
         rshape = tuple(stop - start for start, stop in region)
         covered = all(
             len(g) == (stop - start)
@@ -285,7 +291,8 @@ class Dmat:
                 "region not fully local to this rank; use local(A) for the "
                 "local part or agg(A) to gather the global array"
             )
-        out = self.local[np.ix_(*pos)].reshape(rshape)
+        # copy: subscript reads hand out private data, never local views
+        out = self.local[tuple(slices)].reshape(rshape).copy()
         return out[()] if out.ndim == 0 else out
 
     # -- misc ---------------------------------------------------------------------

@@ -1,0 +1,409 @@
+"""Execution engine v3: fast paths must be byte-identical to the naive
+gather/scatter executor.
+
+The compiled engine has four distinct data paths — zero-copy contiguous
+views, strided-view packs through persistent staging, direct
+``irecv_into`` landings, and the ragged flat-index fallback — plus the
+opt-in by-reference zero-copy view mode.  Every one of them must move
+exactly the bytes ``np.ix_`` gather/scatter moves, across 1–4-D
+block/cyclic/block-cyclic(+overlap) map pairs on all three transports,
+including empty intersections and ragged (non-lowerable) cyclic index
+sets.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+import repro.core as pp
+from repro.comm import get_context, run_spmd
+from repro.comm.testing import TRANSPORTS, run_transport_spmd
+from repro.core import Dmap, clear_plan_cache, exec_stats, reset_exec_stats
+from repro.core.redist import (
+    _lower_positions,
+    get_plan,
+    plan_cache_stats,
+    redistribute,
+)
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+
+# ---------------------------------------------------------------------------
+# Index-set lowering units
+# ---------------------------------------------------------------------------
+
+
+class TestLowering:
+    def test_contiguous_is_slice(self):
+        assert _lower_positions(np.arange(3, 9)) == ("slice", 3, 6, 1)
+
+    def test_singleton_is_slice(self):
+        assert _lower_positions(np.array([7])) == ("slice", 7, 1, 1)
+
+    def test_uniform_stride_is_slice(self):
+        # a pure cyclic ownership set lowers to a strided basic slice
+        assert _lower_positions(np.arange(2, 40, 4)) == ("slice", 2, 10, 4)
+
+    def test_block_cyclic_is_segment_family(self):
+        pos = np.array([4, 5, 6, 16, 17, 18, 28, 29, 30])
+        assert _lower_positions(pos) == ("segs", 4, 3, 3, 12)
+
+    def test_ragged_tail_is_fancy(self):
+        # block-cyclic remainder: last segment shorter -> NOT sliceable
+        pos = np.array([0, 1, 2, 12, 13, 14, 24, 25])
+        kind, payload = _lower_positions(pos)[0], _lower_positions(pos)[1:]
+        assert kind == "fancy"
+        np.testing.assert_array_equal(payload[0], pos)
+
+    def test_irregular_cyclic_subset_is_fancy(self):
+        # non-uniform spacing must never take the slice path
+        assert _lower_positions(np.array([0, 1, 3, 7]))[0] == "fancy"
+        assert _lower_positions(np.array([0, 2, 3, 5, 6]))[0] == "fancy"
+
+
+# ---------------------------------------------------------------------------
+# Coalesced == naive, across the transport matrix
+# ---------------------------------------------------------------------------
+
+
+def _roundtrip(shape, spec_src, spec_dst, coalesce, dtype):
+    """Field under src map -> dst map; returns (agg result, local copy)."""
+    import repro.comm as comm
+
+    world = comm.Np()
+    grid_s, dist_s, over_s, procs_s = spec_src
+    grid_d, dist_d, over_d, procs_d = spec_dst
+    map_s = Dmap(grid_s, dist_s, procs_s or range(world), overlap=over_s)
+    map_d = Dmap(grid_d, dist_d, procs_d or range(world), overlap=over_d)
+    x = pp.arange_field(*shape, map=map_s, dtype=dtype)
+    z = pp.zeros(*shape, map=map_d, dtype=dtype)
+    redistribute(z, x, coalesce=coalesce)
+    return pp.agg(z, root=0), z.local.copy()
+
+
+def _assert_paths_identical(transport, shape, spec_src, spec_dst, tmp_path,
+                            np_=4, dtype=np.float64):
+    outs = {}
+    for coalesce in (False, True):
+        sub = tmp_path / f"c{coalesce}"
+        sub.mkdir(exist_ok=True)
+        res = run_transport_spmd(
+            _roundtrip, np_, transport, comm_dir=sub,
+            args=(shape, spec_src, spec_dst, coalesce, dtype),
+        )
+        outs[coalesce] = res
+    want = np.arange(np.prod(shape)).reshape(shape).astype(dtype)
+    np.testing.assert_array_equal(outs[True][0][0], want)
+    for (agg_n, loc_n), (agg_c, loc_c) in zip(outs[False], outs[True]):
+        # byte-identical locals on every rank, not merely equal values
+        assert loc_n.tobytes() == loc_c.tobytes()
+
+
+# (grid, dist, overlap, proclist) — None proclist means all world ranks
+SPEC_PAIRS = [
+    # 1-D: block -> cyclic (strided-slice fast path)
+    ((13,), ([4], {}, None, None), ([4], "c", None, None)),
+    # 2-D corner turn, pure block (contiguous zero-copy / direct paths)
+    ((12, 8), ([4, 1], {}, None, None), ([1, 4], {}, None, None)),
+    # 2-D block-cyclic corner turn, exact tiling (segment families)
+    ((16, 16), ([4, 1], {"dist": "bc", "size": 2}, None, None),
+     ([1, 4], {"dist": "bc", "size": 2}, None, None)),
+    # 2-D block-cyclic with ragged remainder (fancy fallback)
+    ((18, 10), ([4, 1], {"dist": "bc", "size": 2}, None, None),
+     ([1, 4], {"dist": "bc", "size": 4}, None, None)),
+    # 3-D with overlap halo on the source
+    ((9, 7, 10), ([2, 2, 1], {}, [1, 0, 0], None),
+     ([1, 2, 2], ["c", "b", "c"], None, None)),
+    # 3-D cyclic/bc mix
+    ((11, 13, 6), ([1, 2, 2], ["b", "c", {"dist": "bc", "size": 2}], None,
+                   None),
+     ([4, 1, 1], {}, None, None)),
+    # 4-D
+    ((4, 6, 5, 3), ([2, 2, 1, 1], {}, None, None),
+     ([1, 1, 2, 2], ["b", "b", "c", "b"], None, None)),
+    # empty intersections: dst lives on 2 of 4 ranks, permuted
+    ((10, 6), ([4, 1], {}, None, None), ([2, 1], {}, None, (3, 1))),
+]
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+@pytest.mark.parametrize("pair", range(len(SPEC_PAIRS)))
+def test_coalesced_identical_to_naive(transport, pair, tmp_path):
+    shape, spec_src, spec_dst = SPEC_PAIRS[pair]
+    _assert_paths_identical(transport, shape, spec_src, spec_dst, tmp_path)
+
+
+@pytest.mark.parametrize("pair", range(len(SPEC_PAIRS)))
+def test_thread_views_mode_identical(pair, tmp_path, monkeypatch):
+    """The zero-copy view mode must also be byte-identical (sources are
+    never mutated mid-flight here, honoring the transport contract)."""
+    monkeypatch.setenv("PPYTHON_REDIST_THREAD_VIEWS", "1")
+    shape, spec_src, spec_dst = SPEC_PAIRS[pair]
+    _assert_paths_identical("thread", shape, spec_src, spec_dst, tmp_path)
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+@pytest.mark.parametrize("src_dtype,dst_dtype", [
+    (np.float64, np.complex128),
+    (np.int64, np.float64),
+    (np.float32, np.float64),
+])
+def test_dtype_casting_matches_naive(transport, src_dtype, dst_dtype,
+                                     tmp_path):
+    """Mismatched src/dst dtypes cast on assignment — identically on the
+    fast paths (exercises the irecv_into cast fallback end to end)."""
+
+    def body(coalesce):
+        import repro.comm as comm
+
+        world = comm.Np()
+        m_src = Dmap([world, 1], {"dist": "bc", "size": 2}, range(world))
+        m_dst = Dmap([1, world], {}, range(world))
+        x = pp.arange_field(12, 8, map=m_src, dtype=src_dtype)
+        z = pp.zeros(12, 8, map=m_dst, dtype=dst_dtype)
+        redistribute(z, x, coalesce=coalesce)
+        return z.local.copy()
+
+    outs = {}
+    for coalesce in (False, True):
+        sub = tmp_path / f"c{coalesce}"
+        sub.mkdir()
+        outs[coalesce] = run_transport_spmd(body, 4, transport,
+                                            comm_dir=sub, args=(coalesce,))
+    for loc_n, loc_c in zip(outs[False], outs[True]):
+        assert loc_n.tobytes() == loc_c.tobytes()
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_chunked_payloads_take_fallback(transport, tmp_path, monkeypatch):
+    """With PPYTHON_MAX_MSG_BYTES forcing chunking, irecv_into cannot
+    land raw bytes — the generic claim+copy fallback must still be
+    byte-identical."""
+    monkeypatch.setenv("PPYTHON_MAX_MSG_BYTES", "4096")
+    shape, spec_src, spec_dst = SPEC_PAIRS[1]
+    _assert_paths_identical(transport, (64, 64), spec_src, spec_dst,
+                            tmp_path)
+
+
+# ---------------------------------------------------------------------------
+# Message/byte/copy counters
+# ---------------------------------------------------------------------------
+
+
+def test_one_message_per_peer_pair():
+    """The coalesced executor posts exactly one message per communicating
+    peer pair per redistribution — never one per block."""
+    clear_plan_cache()
+    iters = 5
+
+    def body():
+        import repro.comm as comm
+
+        world = comm.Np()
+        me = comm.Pid()
+        src = Dmap([world, 1], {"dist": "bc", "size": 2}, range(world))
+        dst = Dmap([1, world], {"dist": "bc", "size": 2}, range(world))
+        x = pp.arange_field(32, 32, map=src)
+        z = pp.zeros(32, 32, map=dst)
+        for _ in range(iters):
+            redistribute(z, x)
+        plan = get_plan(x.dmap, x.shape, z.dmap, z.shape,
+                        ((0, 32), (0, 32)), me)
+        return len(plan.sends)
+
+    peers = sum(run_spmd(body, 4))
+    stats = exec_stats()
+    assert stats["messages"] == peers * iters
+    assert stats["naive_executions"] == 0
+    # block-cyclic corner turn: packs on send, staged/direct on receive
+    assert stats["sends_packed"] + stats["sends_zero_copy"] \
+        + stats["sends_fancy"] == stats["messages"]
+
+
+def test_counters_in_plan_cache_stats_and_reset():
+    clear_plan_cache()
+
+    def body():
+        import repro.comm as comm
+
+        world = comm.Np()
+        src = Dmap([world, 1], {}, range(world))
+        dst = Dmap([1, world], {}, range(world))
+        x = pp.arange_field(8, 8, map=src)
+        z = pp.zeros(8, 8, map=dst)
+        redistribute(z, x)
+
+    run_spmd(body, 2)
+    stats = plan_cache_stats()
+    assert stats["messages"] == 2 and stats["bytes"] > 0
+    reset_exec_stats()
+    after = plan_cache_stats()
+    assert after["messages"] == 0  # counters cleared...
+    assert after["misses"] == stats["misses"]  # ...but plans retained
+
+
+def test_zero_copy_counters_block_corner_turns():
+    """Pure block corner turns on a serializing transport: the col->row
+    direction sends contiguous views (zero-copy exports), the row->col
+    direction receives into contiguous dst.local regions (direct
+    irecv_into landings)."""
+
+    def body(forward):
+        import repro.comm as comm
+
+        world = comm.Np()
+        row = Dmap([world, 1], {}, range(world))
+        col = Dmap([1, world], {}, range(world))
+        src, dst = (row, col) if forward else (col, row)
+        x = pp.arange_field(16, 16, map=src)
+        z = pp.zeros(16, 16, map=dst)
+        redistribute(z, x)
+        return None
+
+    clear_plan_cache()
+    run_transport_spmd(body, 4, "socket", args=(False,))
+    stats = exec_stats()
+    assert stats["sends_zero_copy"] == stats["messages"] > 0
+    assert stats["sends_packed"] == 0
+
+    clear_plan_cache()
+    run_transport_spmd(body, 4, "socket", args=(True,))
+    stats = exec_stats()
+    assert stats["recvs_direct"] == stats["messages"] > 0
+    assert stats["recvs_staged"] == 0
+
+
+# ---------------------------------------------------------------------------
+# irecv_into transport contract
+# ---------------------------------------------------------------------------
+
+
+def _irecv_into_body(case: str):
+    ctx = get_context()
+    me, peer = ctx.pid, ctx.pid ^ 1
+    payload = np.arange(24, dtype=np.float64).reshape(4, 6)
+    if case == "match":
+        buf = np.empty((4, 6), dtype=np.float64)
+    elif case == "reshape":
+        buf = np.empty((2, 2, 6), dtype=np.float64)  # same elements
+    elif case == "cast":
+        buf = np.empty((4, 6), dtype=np.float32)
+    elif case == "noncontig":
+        base = np.zeros((4, 12), dtype=np.float64)
+        buf = base[:, ::2]  # non-contiguous writable view
+    if me == 0:
+        ctx.send(peer, "ri", payload)
+        req = ctx.irecv_into(peer, "ri", buf)
+    else:
+        req = ctx.irecv_into(peer, "ri", buf)
+        ctx.send(peer, "ri", payload)
+    got = req.wait()
+    assert got is buf
+    np.testing.assert_array_equal(
+        np.asarray(got, dtype=np.float64).reshape(4, 6), payload
+    )
+    return True
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+@pytest.mark.parametrize("case", ["match", "reshape", "cast", "noncontig"])
+def test_irecv_into_lands_in_buffer(transport, case, tmp_path):
+    assert all(run_transport_spmd(_irecv_into_body, 2, transport,
+                                  comm_dir=tmp_path, args=(case,)))
+
+
+def _irecv_into_late_post_body():
+    """Message fully arrives before irecv_into posts: the registration
+    race path (socket) / existing-file path (file) must still land."""
+    import time
+
+    ctx = get_context()
+    me, peer = ctx.pid, ctx.pid ^ 1
+    payload = np.arange(10, dtype=np.int64)
+    ctx.send(peer, "late", payload)
+    time.sleep(0.2)  # let the wire reader decode before the post
+    buf = np.empty(10, dtype=np.int64)
+    got = ctx.irecv_into(peer, "late", buf).wait()
+    assert got is buf
+    np.testing.assert_array_equal(buf, payload)
+    return True
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_irecv_into_after_arrival(transport, tmp_path):
+    assert all(run_transport_spmd(_irecv_into_late_post_body, 2, transport,
+                                  comm_dir=tmp_path))
+
+
+def _irecv_into_seq_interleave_body():
+    """irecv_into and irecv share one FIFO seq stream per (src, tag)."""
+    ctx = get_context()
+    me, peer = ctx.pid, ctx.pid ^ 1
+    a = np.full(5, 1.0)
+    b = np.full(5, 2.0)
+    ctx.send(peer, "seq", a)
+    ctx.send(peer, "seq", b)
+    buf = np.empty(5)
+    first = ctx.irecv_into(peer, "seq", buf)
+    second = ctx.irecv(peer, "seq")
+    np.testing.assert_array_equal(first.wait(), a)
+    np.testing.assert_array_equal(second.wait(), b)
+    return True
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_irecv_into_seq_ordering(transport, tmp_path):
+    assert all(run_transport_spmd(_irecv_into_seq_interleave_body, 2,
+                                  transport, comm_dir=tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# Property test: random map pairs (hypothesis, skipped when absent)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    dist_spec = st.sampled_from(
+        ["b", "c", {"dist": "bc", "size": 2}, {"dist": "bc", "size": 3}]
+    )
+
+    @st.composite
+    def map_pair(draw):
+        ndim = draw(st.integers(min_value=1, max_value=3))
+        shape = tuple(draw(st.integers(min_value=4, max_value=14))
+                      for _ in range(ndim))
+        def grid(world):
+            axes = [1] * ndim
+            axes[draw(st.integers(min_value=0, max_value=ndim - 1))] = world
+            return axes
+        dists = [draw(dist_spec) for _ in range(ndim)], \
+                [draw(dist_spec) for _ in range(ndim)]
+        return shape, grid(4), dists[0], grid(4), dists[1]
+else:  # the compat shim provides inert strategies
+    def map_pair():
+        return None
+
+
+@settings(max_examples=25, deadline=None)
+@given(map_pair())
+def test_property_random_maps_identical(params):
+    if params is None:
+        pytest.skip("hypothesis not installed")
+    shape, grid_s, dist_s, grid_d, dist_d = params
+
+    def body(coalesce):
+        import repro.comm as comm
+
+        world = comm.Np()
+        m_s = Dmap(grid_s, dist_s, range(world))
+        m_d = Dmap(grid_d, dist_d, range(world))
+        x = pp.arange_field(*shape, map=m_s)
+        z = pp.zeros(*shape, map=m_d)
+        redistribute(z, x, coalesce=coalesce)
+        return z.local.copy()
+
+    naive = run_spmd(body, 4, args=(False,))
+    fast = run_spmd(body, 4, args=(True,))
+    for n, c in zip(naive, fast):
+        assert n.tobytes() == c.tobytes()
