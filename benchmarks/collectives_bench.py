@@ -3,7 +3,7 @@
 For each collective, times every algorithm (including the seed baselines
 — ``linear`` bcast, ``gatherbcast`` allgather, allgather-then-reduce
 ``gather`` allreduce, ``central`` barrier) across payload sizes on any
-transport of the matrix (thread/file/socket), and reports latency,
+transport of the matrix (thread/file/socket/shm), and reports latency,
 effective bandwidth, and speedup over the baseline.  The acceptance bar
 for the collectives subsystem is tree bcast and ring allreduce ≥2× over
 the seed paths at np=8 on 4 MB ThreadComm payloads.
@@ -19,7 +19,7 @@ Usage::
 
     PYTHONPATH=src python benchmarks/collectives_bench.py [--np 8]
         [--sizes 4096,4194304] [--iters 10]
-        [--transport thread|file|socket|all]
+        [--transport thread|file|socket|shm|all]
     PYTHONPATH=src python benchmarks/collectives_bench.py --smoke
 """
 

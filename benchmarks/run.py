@@ -22,7 +22,6 @@ import time
 
 
 def _kernel_rows() -> list[dict]:
-    import jax
     import jax.numpy as jnp
     import numpy as np
 

@@ -1,7 +1,7 @@
 """PythonMPI — pPython's messaging layer (paper §III.D).
 
-Four interchangeable transports behind one interface
-(``PPYTHON_TRANSPORT=file|socket|thread`` selects at ``init()``):
+Five interchangeable transports behind one interface
+(``PPYTHON_TRANSPORT=file|socket|shm|thread`` selects at ``init()``):
 
 * ``FileMPI``   — the paper's transport: pickle payloads through a shared
                   filesystem, one-sided (a send never waits for its receive),
@@ -9,6 +9,9 @@ Four interchangeable transports behind one interface
 * ``SocketComm``— persistent peer-to-peer TCP connections bootstrapped by a
                   rendezvous (``comm/rendezvous.py``); multi-node with NO
                   shared filesystem, no fsync/poll on the message path.
+* ``ShmComm``   — single-node multi-process over per-peer mmap'd ring
+                  arenas (``/dev/shm``-backed by pRUN): one copy each way,
+                  zero receive-side copy under ``irecv_into``.
 * ``ThreadComm``— in-process queues; used by tests/benchmarks to run SPMD
                   codes without process-launch overhead.
 * ``LocalComm`` — Np=1 degenerate context (every op is a no-op/self-copy).
@@ -40,6 +43,7 @@ from .context import (
     set_context,
 )
 from .filempi import FileMPI
+from .shmcomm import ShmComm
 from .socketcomm import SocketComm
 from .threadcomm import ThreadComm, run_spmd
 
@@ -47,6 +51,7 @@ __all__ = [
     "CommContext",
     "FileMPI",
     "LocalComm",
+    "ShmComm",
     "SocketComm",
     "ThreadComm",
     "Group",

@@ -58,6 +58,7 @@ from __future__ import annotations
 
 import hashlib
 import os
+import threading
 from typing import Any, Callable, Sequence
 
 import numpy as np
@@ -74,6 +75,8 @@ __all__ = [
     "select_allreduce",
     "select_allgather",
     "select_gather",
+    "coll_stats",
+    "reset_coll_stats",
     "DEFAULT_EAGER_BYTES",
 ]
 
@@ -84,10 +87,16 @@ DEFAULT_EAGER_BYTES = 64 * 1024
 _MAX_RING_CHUNKS = 32
 
 
-def eager_bytes() -> int:
-    """Eager/rendezvous switch point (``PPYTHON_COLL_EAGER_BYTES``)."""
+def eager_bytes(default: int | None = None) -> int:
+    """Eager/rendezvous switch point (``PPYTHON_COLL_EAGER_BYTES``).
+
+    The env var always wins; otherwise ``default`` lets a transport ship
+    its own tuning (ShmComm's intra-node memory bandwidth keeps the
+    eager tree competitive to 256 KiB) without touching the global."""
     raw = os.environ.get("PPYTHON_COLL_EAGER_BYTES", "")
-    return int(raw) if raw else DEFAULT_EAGER_BYTES
+    if raw:
+        return int(raw)
+    return DEFAULT_EAGER_BYTES if default is None else default
 
 
 def payload_nbytes(obj: Any) -> int:
@@ -101,25 +110,28 @@ def payload_nbytes(obj: Any) -> int:
 # ---------------------------------------------------------------------------
 
 
-def select_bcast(nbytes: int, size: int, onefile: bool = False) -> str:
+def select_bcast(nbytes: int, size: int, onefile: bool = False,
+                 eager: int | None = None) -> str:
     """Bcast policy for *serializing* transports.  FileMPI overrides it
     with the one-file path, and on by-reference transports ``Group.bcast``
     prefers the frozen-buffer tree (one pinned copy, zero-copy fan-out)
     for ndarrays at every size — SocketComm is the transport that follows
     this table as-is: eager tree for small payloads, chunked ring for
-    long ndarrays."""
+    long ndarrays.  ``eager`` is the transport-tuned switch point
+    (``Group`` passes its context's; the env var still wins inside
+    :func:`eager_bytes`)."""
     if onefile:
         # one payload file + N in-place readers beats any message tree on a
         # shared filesystem (MatlabMPI's trick)
         return "onefile"
-    if size <= 2 or nbytes <= eager_bytes():
+    if size <= 2 or nbytes <= eager_bytes(eager):
         return "tree"
     return "ring"
 
 
-def select_allreduce(nbytes: int, size: int) -> str:
+def select_allreduce(nbytes: int, size: int, eager: int | None = None) -> str:
     # the ring needs nbytes to be a real ndarray payload worth chunking
-    if size <= 2 or nbytes <= eager_bytes():
+    if size <= 2 or nbytes <= eager_bytes(eager):
         return "rd"
     return "ring"
 
@@ -135,6 +147,54 @@ def select_gather(size: int) -> str:
     # flat arrival-order completion moves each payload once (bandwidth
     # optimal); the binomial tree only wins on latency at larger fan-in
     return "tree" if size >= 16 else "flat"
+
+
+# ---------------------------------------------------------------------------
+# Observability: hop-level counters (the redist exec_stats idea applied
+# to collectives) — tests assert the ring paths are allocation-free
+# ---------------------------------------------------------------------------
+
+
+class _CollStats:
+    """Process-wide counters over collective data movement.
+
+    ``ring_hops_into``   ring hops received into persistent staging or
+                         final storage via ``irecv_into`` (no fresh
+                         receive buffer);
+    ``ring_hops_alloc``  ring hops that still allocate a fresh receive
+                         buffer (the unstaged fallback paths);
+    ``staging_allocs``   persistent per-group staging buffers created
+                         (steady state: zero — buffers are reused).
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.reset()
+
+    def reset(self) -> None:
+        self._c = {"ring_hops_into": 0, "ring_hops_alloc": 0,
+                   "staging_allocs": 0}
+
+    def add(self, **deltas: int) -> None:
+        with self._lock:
+            for k, v in deltas.items():
+                self._c[k] += v
+
+    def snapshot(self) -> dict[str, int]:
+        with self._lock:
+            return dict(self._c)
+
+
+_coll_stats = _CollStats()
+
+
+def coll_stats() -> dict[str, int]:
+    """Counters of collective hop mechanics since the last reset."""
+    return _coll_stats.snapshot()
+
+
+def reset_coll_stats() -> None:
+    _coll_stats.reset()
 
 
 # ---------------------------------------------------------------------------
@@ -222,6 +282,11 @@ class Group:
         self.size = len(ranks)
         self.rank = ranks.index(ctx.pid) if ctx.pid in ranks else None
         self.key = _group_token(ranks)
+        # persistent per-group staging (ring work/hop buffers), grow-only
+        # and keyed by role + dtype: groups are memoized per context
+        # (``group_of``), so steady-state iterative collectives reuse
+        # these across calls and allocate nothing per hop
+        self._staging: dict[tuple, np.ndarray] = {}
 
     def __repr__(self) -> str:
         return f"Group(ranks={list(self.ranks)}, rank={self.rank})"
@@ -269,6 +334,28 @@ class Group:
     def _irecv(self, src: int, tag: Any):
         return self.ctx.irecv(self.ranks[src], tag)
 
+    def _recv_into(self, src: int, tag: Any, buffer: np.ndarray) -> None:
+        """Blocking receive landing in ``buffer`` (a ring-hop primitive:
+        serializing transports decode payload bytes straight into it)."""
+        self.ctx.irecv_into(self.ranks[src], tag, buffer).wait()
+        _coll_stats.add(ring_hops_into=1)
+
+    def _eager(self) -> int:
+        """This group's eager/rendezvous switch point: the env var if
+        set, else the transport's tuned default (e.g. ShmComm's 256 KiB),
+        else the global default."""
+        return eager_bytes(getattr(self.ctx, "coll_eager_default", None))
+
+    def _staging_buf(self, role: str, nelems: int, dtype) -> np.ndarray:
+        """Persistent per-(role, dtype) staging, grown but never shrunk."""
+        key = (role, np.dtype(dtype).str)
+        buf = self._staging.get(key)
+        if buf is None or buf.size < nelems:
+            buf = np.empty(nelems, dtype=dtype)
+            self._staging[key] = buf
+            _coll_stats.add(staging_allocs=1)
+        return buf
+
     # -- broadcast ---------------------------------------------------------
 
     def bcast(self, obj: Any = None, root: int | None = None, tag: Any = None,
@@ -296,7 +383,8 @@ class Group:
                 if byref and isinstance(obj, np.ndarray):
                     algo = "tree"
                 else:
-                    algo = select_bcast(payload_nbytes(obj), self.size)
+                    algo = select_bcast(payload_nbytes(obj), self.size,
+                                        eager=self._eager())
             if algo == "tree":
                 if byref and isinstance(obj, np.ndarray):
                     # ONE pinning copy at the root; the frozen buffer then
@@ -316,8 +404,9 @@ class Group:
         if head[0] == "e":
             return head[1]
         _, nchunks, shape, dtype = head
-        flat = self._bcast_ring(None, rootg, base, nchunks)
-        return flat.reshape(shape).astype(dtype, copy=False)
+        out = self._bcast_ring(None, rootg, base, nchunks,
+                               shape=shape, dtype=dtype)
+        return out.reshape(shape)
 
     def _bcast_linear(self, obj: Any, rootg: int, base) -> Any:
         """The seed algorithm: serialized fan-out from the root (O(P) at
@@ -346,16 +435,29 @@ class Group:
             mask >>= 1
         return obj
 
-    @staticmethod
-    def _ring_chunks(nbytes: int) -> int:
-        chunk = max(eager_bytes(), 1)
+    def _ring_chunks(self, nbytes: int) -> int:
+        chunk = max(self._eager(), 1)
         return max(1, min(_MAX_RING_CHUNKS, -(-nbytes // chunk)))
 
+    @staticmethod
+    def _split_bounds(n: int, k: int) -> list[int]:
+        """The k+1 boundaries ``np.array_split`` uses for n elements —
+        shared by sender and receivers so piece views line up."""
+        sizes = [n // k + 1] * (n % k) + [n // k] * (k - n % k)
+        bounds = [0]
+        for s in sizes:
+            bounds.append(bounds[-1] + s)
+        return bounds
+
     def _bcast_ring(self, arr: np.ndarray | None, rootg: int, base,
-                    nchunks: int) -> np.ndarray:
+                    nchunks: int, shape=None, dtype=None) -> np.ndarray:
         """Pipelined chain in relative-rank order: the root streams chunks
         to its successor; every rank forwards each chunk as it lands, so
-        steady state moves the whole payload once per rank, overlapped."""
+        steady state moves the whole payload once per rank, overlapped.
+
+        Non-root ranks land every piece straight into their (single)
+        output allocation via ``irecv_into`` — no per-piece receive
+        buffers and no final concatenate."""
         rel = (self.rank - rootg) % self.size
         nxt = (rel + 1 + rootg) % self.size
         if rel == 0:
@@ -363,15 +465,18 @@ class Group:
             for i, piece in enumerate(np.array_split(flat, nchunks)):
                 self._send(nxt, (base, "c", i), piece)
             return arr
-        pieces = []
+        n = 1
+        for d in shape:
+            n *= d
+        out = np.empty(n, dtype=dtype)
+        bounds = self._split_bounds(n, nchunks)
         for i in range(nchunks):
-            piece = self._freeze_hop(
-                self._recv((rel - 1 + rootg) % self.size, (base, "c", i))
-            )
+            piece = out[bounds[i] : bounds[i + 1]]
+            self._recv_into((rel - 1 + rootg) % self.size, (base, "c", i),
+                            piece)
             if rel + 1 < self.size:
                 self._send(nxt, (base, "c", i), piece)
-            pieces.append(piece)
-        return np.concatenate(pieces)
+        return out
 
     # -- reduce ------------------------------------------------------------
 
@@ -496,6 +601,7 @@ class Group:
             return value
         base = self._base_tag("ar", tag)
         shape = None
+        staged = False
         if algo is None:
             # contributions may be None or ragged (empty Dmat parts), so a
             # locally-selected algorithm could differ across ranks and
@@ -503,7 +609,8 @@ class Group:
             # ships the choice — plus the output shape the ring needs —
             # down a tiny tree header
             if me == 0:
-                algo = select_allreduce(payload_nbytes(value), self.size)
+                algo = select_allreduce(payload_nbytes(value), self.size,
+                                        eager=self._eager())
                 head = ((algo, value.shape, value.dtype) if algo == "ring"
                         else (algo,))
             else:
@@ -512,6 +619,24 @@ class Group:
             algo = head[0]
             if algo == "ring":
                 shape = head[1]
+                # the staged (allocation-free, irecv_into) ring needs an
+                # ndarray on EVERY rank; a tiny reduce-then-bcast of the
+                # None flags decides it group-wide — two log-P legs of
+                # ~40-byte messages on a path already moving megabytes
+                any_none = self.reduce(value is None, lambda a, b: a or b,
+                                       root=self.ranks[0], tag=(base, "nn"))
+                staged = self._bcast_tree(
+                    (not any_none) if me == 0 else None, 0, (base, "st"))
+        elif algo == "ring":
+            # forced ring: every rank below raises on a None contribution,
+            # so reaching the hops at all implies ndarrays everywhere
+            staged = value is not None
+        if getattr(self.ctx, "payload_by_reference", False):
+            # staging buys nothing by-reference: every staged hop would
+            # pay a _pin copy on send AND a landing copy, while the
+            # unstaged ring circulates frozen received buffers for free —
+            # keep the reference-forwarding path there
+            staged = False
         if algo == "gather":
             # seed baseline: allgather every contribution, reduce
             # redundantly on all P ranks
@@ -532,7 +657,8 @@ class Group:
                     "algo='ring' allreduce needs an ndarray contribution "
                     "on every rank; use auto mode for None contributions"
                 )
-            return self._allreduce_ring(value, op, base, shape=shape)
+            return self._allreduce_ring(value, op, base, shape=shape,
+                                        staged=staged)
         return self._allreduce_rd(value, op, base)
 
     def _allreduce_rd(self, value: Any, op: Callable, base) -> Any:
@@ -574,16 +700,28 @@ class Group:
                 value = self._recv(me + 1, (base, "unfold"))
         return value
 
-    def _allreduce_ring(self, arr, op: Callable, base,
-                        shape=None) -> np.ndarray:
+    def _allreduce_ring(self, arr, op: Callable, base, shape=None,
+                        staged: bool = False) -> np.ndarray:
         """Ring reduce-scatter + ring allgather: 2·(P-1)/P of the payload
         through every rank regardless of P (vs. the seed baseline's P·S
         through the root and (P-1)·S reduced on every rank).
 
-        A rank may contribute ``None`` (empty Dmat part): it circulates
-        None chunks — skipped by the combine step — and reshapes via the
-        leader-shipped ``shape``.  (Auto mode only selects the ring when
-        the *leader* holds an array, so every chunk resolves.)"""
+        ``staged`` (every rank holds an ndarray — decided group-wide by
+        the caller) runs the hops **allocation-free**: the vector lives
+        in a persistent per-group work buffer, every hop receives into a
+        persistent staging chunk via ``irecv_into`` (serializing
+        transports decode payload bytes straight into it), the combine
+        runs in place for ufuncs, and the allgather lap lands directly
+        in the work buffer's chunk views.  The only per-call allocation
+        is the returned result.
+
+        Unstaged, a rank may contribute ``None`` (empty Dmat part): it
+        circulates None chunks — skipped by the combine step — and
+        reshapes via the leader-shipped ``shape``.  (Auto mode only
+        selects the ring when the *leader* holds an array, so every
+        chunk resolves.)"""
+        if staged:
+            return self._allreduce_ring_staged(np.asarray(arr), op, base)
         if arr is None:
             chunks: list = [None] * self.size
         else:
@@ -601,6 +739,36 @@ class Group:
         out = np.concatenate(chunks)
         return out if shape is None else out.reshape(shape)
 
+    def _allreduce_ring_staged(self, arr: np.ndarray, op: Callable,
+                               base) -> np.ndarray:
+        shape = arr.shape
+        n = arr.size
+        me = self.rank
+        right, left = (me + 1) % self.size, (me - 1) % self.size
+        work = self._staging_buf("ar_work", n, arr.dtype)[:n]
+        np.copyto(work.reshape(shape), arr)
+        chunks = np.array_split(work, self.size)  # contiguous views
+        hop = self._staging_buf(
+            "ar_hop", max(c.size for c in chunks), arr.dtype)
+        for step in range(self.size - 1):
+            si = (me - 1 - step) % self.size
+            ri = (me - 2 - step) % self.size
+            self._send(right, (base, "rs", step), chunks[si])
+            h = hop[: chunks[ri].size]
+            self._recv_into(left, (base, "rs", step), h)
+            if isinstance(op, np.ufunc):
+                op(chunks[ri], h, out=chunks[ri])
+            else:
+                # op may return (a view of) either operand; copyto
+                # materializes the result before the staging is reused
+                np.copyto(chunks[ri], op(chunks[ri], h))
+        for step in range(self.size - 1):
+            si = (me - step) % self.size
+            ri = (me - 1 - step) % self.size
+            self._send(right, (base, "rag", step), chunks[si])
+            self._recv_into(left, (base, "rag", step), chunks[ri])
+        return work.copy().reshape(shape)
+
     def _ring_reduce_scatter(self, chunks: list, op: Callable, base) -> list:
         """P-1 ring steps; afterwards ``chunks[self.rank]`` holds the fully
         reduced chunk for this rank."""
@@ -612,6 +780,7 @@ class Group:
             self._send(right, (base, "rs", step), chunks[si])
             chunks[ri] = _combine(op, chunks[ri],
                                   self._recv(left, (base, "rs", step)))
+            _coll_stats.add(ring_hops_alloc=1)
         return chunks
 
     def _ring_allgather_chunks(self, chunks: list, base) -> list:
@@ -622,6 +791,7 @@ class Group:
             ri = (me - 1 - step) % self.size
             self._send(right, (base, "rag", step), chunks[si])
             chunks[ri] = self._freeze_hop(self._recv(left, (base, "rag", step)))
+            _coll_stats.add(ring_hops_alloc=1)
         return chunks
 
     # -- reduce_scatter ----------------------------------------------------

@@ -4,10 +4,12 @@
 MPI                     pPython
 ======================  ====================================================
 MPI_Init                ``init()`` — transport picked by
-                        ``PPYTHON_TRANSPORT=file|socket|thread``:
+                        ``PPYTHON_TRANSPORT=file|socket|shm|thread``:
                         ``file`` = the paper's shared-directory PythonMPI,
                         ``socket`` = TCP peer mesh bootstrapped through a
-                        rendezvous (no shared filesystem), ``thread`` =
+                        rendezvous (no shared filesystem), ``shm`` =
+                        single-node mmap'd ring arenas (``PPYTHON_SHM_DIR``,
+                        memory-speed multi-process), ``thread`` =
                         in-process ranks (``run_spmd``/pRUN only)
 MPI_Comm_size / _rank   ``.np_`` / ``.pid``
 MPI_Send / MPI_Recv     ``.send`` / ``.recv`` (plus ``isend``/``irecv``/
@@ -18,7 +20,9 @@ MPI_Irecv(buf)          ``.irecv_into`` — receive *into* caller memory;
                         coalesced blocks straight in ``dst.local``)
 MPI_Bcast               ``.bcast``      — binomial tree / chunked ring /
                                           one-file on FileMPI, frozen-
-                                          buffer tree on ThreadComm
+                                          buffer tree on ThreadComm;
+                                          ShmComm raises the eager
+                                          switch point to 256 KiB
                                           (``collectives.py``)
 MPI_Barrier             ``.barrier``    — dissemination
 MPI_Gather              ``.gather``     — arrival-order flat / binomial
@@ -402,6 +406,9 @@ def init(ctx: CommContext | None = None) -> CommContext:
       rendezvous (``PPYTHON_RDZV_ADDR`` TCP bootstrap, or
       ``PPYTHON_RDZV_DIR``/``PPYTHON_COMM_DIR`` one-time file exchange).
       No shared filesystem on any message path.
+    * ``shm`` — single-node multi-process over mmap'd ring arenas in
+      ``PPYTHON_SHM_DIR`` (pRUN places it under ``/dev/shm``); falls
+      back to ``<PPYTHON_COMM_DIR>/shm`` when only a comm dir is set.
     * ``thread`` — in-process ranks; only meaningful inside a process
       that hosts the whole world (``run_spmd`` / ``pRUN(...,
       transport="thread")`` install contexts directly), so ``init()``
@@ -426,6 +433,23 @@ def init(ctx: CommContext | None = None) -> CommContext:
                     pid=int(os.environ["PPYTHON_PID"]),
                     comm_dir=os.environ["PPYTHON_COMM_DIR"],
                 )
+            elif transport == "shm":
+                from .shmcomm import ShmComm
+
+                shm_dir = os.environ.get("PPYTHON_SHM_DIR")
+                if not shm_dir:
+                    comm_dir = os.environ.get("PPYTHON_COMM_DIR")
+                    if not comm_dir:
+                        raise ValueError(
+                            "PPYTHON_TRANSPORT=shm needs PPYTHON_SHM_DIR "
+                            "(or PPYTHON_COMM_DIR to derive it from)"
+                        )
+                    shm_dir = os.path.join(comm_dir, "shm")
+                ctx = ShmComm(
+                    np_=np_,
+                    pid=int(os.environ["PPYTHON_PID"]),
+                    shm_dir=shm_dir,
+                )
             elif transport == "thread":
                 raise ValueError(
                     "PPYTHON_TRANSPORT=thread hosts all ranks inside one "
@@ -435,7 +459,7 @@ def init(ctx: CommContext | None = None) -> CommContext:
             else:
                 raise ValueError(
                     f"unknown PPYTHON_TRANSPORT {transport!r} "
-                    "(expected file|socket|thread)"
+                    "(expected file|socket|shm|thread)"
                 )
         else:
             ctx = LocalComm()

@@ -31,6 +31,7 @@ __all__ = [
     "FOOT",
     "MAGIC",
     "ChunkHeader",
+    "chunk_windows",
     "decode_frame",
     "encode_frame",
     "max_msg_bytes",
@@ -82,6 +83,28 @@ def encode_frame(obj: Any, flags: int = 0) -> list:
     parts.append(struct.pack(f"<{len(raws)}Q", *[len(r) for r in raws]))
     parts.append(FOOT.pack(len(head), len(raws), flags, MAGIC))
     return parts
+
+
+def chunk_windows(parts, limit: int):
+    """Split a flat frame (``encode_frame`` pieces) into ``<= limit``-byte
+    windows of memoryview slices, yielding ``(offset, slices)`` per
+    window.  No join: the sender streams slices straight off the frame
+    pieces and never holds payload + a wire copy (SocketComm and ShmComm
+    both chunk oversize payloads through this one walk)."""
+    views = [memoryview(p) for p in parts]
+    off = 0
+    while views:
+        slices, room = [], limit
+        while views and room:
+            take = min(len(views[0]), room)
+            slices.append(views[0][:take])
+            if take == len(views[0]):
+                views.pop(0)
+            else:
+                views[0] = views[0][take:]
+            room -= take
+        yield off, slices
+        off += limit - room
 
 
 def read_footer(path: Path) -> tuple[int, int, int] | None:

@@ -63,6 +63,7 @@ from .context import (
     recv_timeout,
 )
 from .frame import (
+    chunk_windows,
     decode_frame,
     encode_frame,
     max_msg_bytes,
@@ -345,29 +346,14 @@ class SocketComm(CommContext):
             total = sum(len(p) for p in parts)
             if total > limit:
                 # oversize: stream the flat frame as <= limit CHUNK
-                # records on the same (tag, seq) — windows of memoryview
-                # slices straight off the frame pieces, no join, so the
-                # sender never holds payload + a wire copy; the receiver
-                # assembles into one preallocated buffer and decodes on
-                # completion
-                views = [memoryview(p) for p in parts]
-                off = 0
-                while views:
-                    slices, room = [], limit
-                    while views and room:
-                        take = min(len(views[0]), room)
-                        slices.append(views[0][:take])
-                        if take == len(views[0]):
-                            views.pop(0)
-                        else:
-                            views[0] = views[0][take:]
-                        room -= take
+                # records on the same (tag, seq); the receiver assembles
+                # into one preallocated buffer and decodes on completion
+                for off, slices in chunk_windows(parts, limit):
                     self._send_record(
                         dest,
                         self._record(_K_CHUNK, tok, seq,
                                      _CHUNK_META.pack(off, total), slices),
                     )
-                    off += limit - room
                 return
             head, raws = parts[0], parts[1:-2]
         else:

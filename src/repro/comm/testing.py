@@ -2,16 +2,18 @@
 
 ``run_transport_spmd(fn, np_, transport)`` mirrors
 ``threadcomm.run_spmd`` but hosts each rank's context on a thread over
-any of the three transports — ``thread`` (in-memory mailboxes), ``file``
-(the paper's shared-directory FileMPI), ``socket`` (the TCP peer mesh) —
-so one parametrized test exercises every algorithm on every fabric
-without process-launch overhead.  Kept in the package (not ``tests/``)
-so the test suite and the collective/redistribution/pingpong benchmarks
-import one copy.
+any of the four transports — ``thread`` (in-memory mailboxes), ``file``
+(the paper's shared-directory FileMPI), ``socket`` (the TCP peer mesh),
+``shm`` (mmap'd ring arenas) — so one parametrized test exercises every
+algorithm on every fabric without process-launch overhead.  Kept in the
+package (not ``tests/``) so the test suite and the
+collective/redistribution/pingpong benchmarks import one copy.
 """
 
 from __future__ import annotations
 
+import itertools
+import os
 import tempfile
 import threading
 from typing import Any, Callable
@@ -19,18 +21,30 @@ from typing import Any, Callable
 from .context import CommContext, set_context
 from .filempi import FileMPI
 from .rendezvous import bind_listener
+from .shmcomm import ShmComm
 from .socketcomm import SocketComm
 from .threadcomm import run_spmd
 
 __all__ = [
     "TRANSPORTS",
     "run_filempi_spmd",
+    "run_shm_spmd",
     "run_socket_spmd",
     "run_transport_spmd",
+    "shm_base_dir",
 ]
 
 # the full matrix every algorithm test should pass on
-TRANSPORTS = ("thread", "file", "socket")
+TRANSPORTS = ("thread", "file", "socket", "shm")
+
+_shm_run_counter = itertools.count()
+
+
+def shm_base_dir() -> str:
+    """Where throwaway shm-arena directories go: ``/dev/shm`` when the
+    node has it (arena pages then never touch a writeback path), else
+    the regular temp dir — MAP_SHARED on any file is still coherent."""
+    return "/dev/shm" if os.path.isdir("/dev/shm") else tempfile.gettempdir()
 
 
 def _run_ctx_spmd(
@@ -116,6 +130,33 @@ def run_socket_spmd(
     )
 
 
+def run_shm_spmd(
+    fn: Callable[..., Any],
+    np_: int,
+    args: tuple = (),
+    timeout: float = 120.0,
+    shm_dir=None,
+) -> list[Any]:
+    """Run ``fn(*args)`` as an SPMD body on ``np_`` ShmComm thread-ranks
+    over a throwaway arena directory (under ``/dev/shm`` when present).
+
+    Each run gets a fresh nonce, so a reused directory can never serve a
+    previous run's arenas; rank contexts unlink their inbound arenas at
+    finalize and the directory itself is reclaimed when throwaway."""
+    nonce = f"spmd-{os.getpid()}-{next(_shm_run_counter)}"
+    if shm_dir is not None:
+        return _run_ctx_spmd(
+            lambda pid: ShmComm(np_, pid, shm_dir, nonce=nonce),
+            fn, np_, args, timeout, "ShmComm",
+        )
+    with tempfile.TemporaryDirectory(
+            prefix="ppython_shm_", dir=shm_base_dir()) as d:
+        return _run_ctx_spmd(
+            lambda pid: ShmComm(np_, pid, d, nonce=nonce),
+            fn, np_, args, timeout, "ShmComm",
+        )
+
+
 def run_transport_spmd(
     fn: Callable[..., Any],
     np_: int,
@@ -126,9 +167,10 @@ def run_transport_spmd(
 ) -> list[Any]:
     """One SPMD entry point across the transport matrix.
 
-    ``transport`` is ``thread``/``file``/``socket`` (``filempi`` accepted
-    as an alias for ``file``); ``comm_dir`` is only consulted by the file
-    transport and defaults to a throwaway temp directory."""
+    ``transport`` is ``thread``/``file``/``socket``/``shm`` (``filempi``
+    accepted as an alias for ``file``); ``comm_dir`` is only consulted by
+    the file transport and defaults to a throwaway temp directory (shm
+    arenas live in their own throwaway directory under ``/dev/shm``)."""
     if transport == "thread":
         return run_spmd(fn, np_, args=args, timeout=timeout)
     if transport in ("file", "filempi"):
@@ -139,6 +181,8 @@ def run_transport_spmd(
             return run_filempi_spmd(fn, np_, d, args=args, timeout=timeout)
     if transport == "socket":
         return run_socket_spmd(fn, np_, args=args, timeout=timeout)
+    if transport == "shm":
+        return run_shm_spmd(fn, np_, args=args, timeout=timeout)
     raise ValueError(
         f"unknown transport {transport!r} (expected one of {TRANSPORTS})"
     )

@@ -27,7 +27,6 @@ Differences vs. the paper, by design (DESIGN.md §9):
 
 from __future__ import annotations
 
-import math
 from typing import Sequence
 
 import numpy as np

@@ -12,8 +12,6 @@ with maps off.
 
 from __future__ import annotations
 
-from typing import Any, Sequence
-
 import numpy as np
 
 from ..comm import get_context

@@ -12,7 +12,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 LANES = 1024  # tile width (multiple of the 128-lane VPU width)

@@ -27,7 +27,7 @@ from repro.core.jax_bridge import (  # noqa: E402
     mesh_for_dmap,
     redistribute,
     scatter_to_mesh,
-    sharding_for,
+    sharding_for,  # noqa: F401  (re-exported for the dryrun harness)
     undo_canonical_layout,
 )
 

@@ -58,3 +58,13 @@ def complex_messages() -> bool:
         z = ctx.recv(0, "cx")
         return bool(np.iscomplexobj(z) and z.shape == (257,))
     return True
+
+
+def crash_on_rank1() -> bool:
+    """Fault-injection body: rank 1 dies hard mid-run (cleanup tests)."""
+    import os
+
+    if Pid() == 1:
+        os._exit(3)
+    get_context().barrier()  # never completes: the launcher kills us
+    return True

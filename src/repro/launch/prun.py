@@ -6,10 +6,14 @@ transport through environment variables::
 
     PPYTHON_NP         world size
     PPYTHON_PID        this instance's rank
-    PPYTHON_TRANSPORT  file | socket | thread
+    PPYTHON_TRANSPORT  file | socket | shm | thread
     PPYTHON_COMM_DIR   shared directory (file transport; scratch for
                        result files otherwise)
     PPYTHON_RDZV_ADDR  rank-0 TCP rendezvous (socket transport)
+    PPYTHON_SHM_DIR    arena directory (shm transport; pRUN puts it
+                       under /dev/shm when the node has it)
+    PPYTHON_SHM_NONCE  per-launch nonce stamped into every arena header
+                       (shm transport; makes stale-directory reuse inert)
 
 ``target`` is either a script path (launched as ``python script.py``) or a
 ``"module:function"`` string (launched through ``prun_worker``).  Rank
@@ -19,9 +23,13 @@ directory, mirroring how gridMatlab collected leader output.
 Transports: ``file`` (default) is the paper's shared-directory messaging;
 ``socket`` launches the same subprocesses but messages flow over a TCP
 peer mesh bootstrapped through a loopback rendezvous server — no comm
-directory on any message path; ``thread`` hosts every rank on a thread of
-*this* process (module:function targets only) — the fastest way to run an
-SPMD body with zero launch overhead.
+directory on any message path; ``shm`` moves messages through mmap'd
+ring arenas in a launcher-owned directory under ``/dev/shm`` — the
+memory-speed single-node path — and the launcher removes that directory
+**unconditionally** (crash included: shared-memory files are RAM, a
+leak outlives the workers); ``thread`` hosts every rank on a thread of
+*this* process (module:function targets only) — the fastest way to run
+an SPMD body with zero launch overhead.
 
 Fault handling beyond the paper: a per-rank supervisor notices dead
 processes (nonzero exit) and, when ``restarts > 0``, relaunches the rank
@@ -42,6 +50,7 @@ import sys
 import tempfile
 import threading
 import time
+import uuid
 from pathlib import Path
 from typing import Any, Sequence
 
@@ -118,16 +127,17 @@ def pRUN(
 ) -> list[Any]:
     """Launch ``np_`` SPMD instances of ``target``; return per-rank results.
 
-    ``transport`` is ``file``/``socket``/``thread`` (default: the
-    ``PPYTHON_TRANSPORT`` environment, else ``file``).  Results are only
-    collected for ``module:function`` targets (scripts run for side
+    ``transport`` is ``file``/``socket``/``shm``/``thread`` (default:
+    the ``PPYTHON_TRANSPORT`` environment, else ``file``).  Results are
+    only collected for ``module:function`` targets (scripts run for side
     effects, matching the paper's usage).
     """
     transport = (transport or os.environ.get("PPYTHON_TRANSPORT")
                  or "file").lower()
-    if transport not in ("file", "socket", "thread"):
+    if transport not in ("file", "socket", "shm", "thread"):
         raise ValueError(
-            f"unknown transport {transport!r} (expected file|socket|thread)"
+            f"unknown transport {transport!r} "
+            "(expected file|socket|shm|thread)"
         )
     if transport == "thread":
         return _run_threaded(target, np_, args, timeout, env)
@@ -136,6 +146,12 @@ def pRUN(
             "pRUN restarts need the file transport for now: a restarted "
             "rank cannot re-join a completed socket rendezvous (peers hold "
             "the dead rank's stale endpoint)"
+        )
+    if transport == "shm" and restarts > 0:
+        raise ValueError(
+            "pRUN restarts need the file transport for now: a restarted "
+            "rank would re-create its inbound arenas under the peers' "
+            "live mappings"
         )
 
     own_dir = comm_dir is None
@@ -153,6 +169,26 @@ def pRUN(
     # file transport also sends messages through it
     base_env["PPYTHON_COMM_DIR"] = str(comm_dir)
     rdzv_srv = None
+    shm_dir: Path | None = None
+    if transport == "shm":
+        # arenas live in a launcher-owned directory under /dev/shm when
+        # the node has it (pages never see a writeback path); a fresh
+        # per-launch nonce is stamped into every arena header so workers
+        # can never attach to arenas a dead run left in a reused dir.
+        # Only the *explicit* env= argument can pin the dir/nonce —
+        # values inherited through os.environ (a shm worker launching a
+        # nested pRUN, a stale export) would collide two live runs on
+        # the same arenas with matching nonces.
+        explicit = env or {}
+        if "PPYTHON_SHM_DIR" in explicit:
+            shm_dir = None  # caller owns the directory and its lifetime
+        else:
+            shm_base = "/dev/shm" if os.path.isdir("/dev/shm") else None
+            shm_dir = Path(tempfile.mkdtemp(prefix="ppython_shm_",
+                                            dir=shm_base))
+            base_env["PPYTHON_SHM_DIR"] = str(shm_dir)
+        if "PPYTHON_SHM_NONCE" not in explicit:
+            base_env["PPYTHON_SHM_NONCE"] = uuid.uuid4().hex
     if transport == "socket" and "PPYTHON_RDZV_ADDR" not in base_env:
         # single-node launch: the launcher itself serves the rendezvous
         # over loopback, so the comm dir never appears on a message path
@@ -182,12 +218,15 @@ def pRUN(
         e["PPYTHON_PID"] = str(pid)
         procs[pid] = subprocess.Popen(cmd, env=e)
 
-    for pid in range(np_):
-        launch(pid)
-
     deadline = time.monotonic() + timeout
     failed = True
     try:
+        # spawning happens inside the try: a mid-loop Popen failure (e.g.
+        # EAGAIN on a loaded box) must still reach the finally, which
+        # kills the ranks already launched and reclaims the arena dir
+        for pid in range(np_):
+            launch(pid)
+
         while True:
             alive = False
             for pid, p in list(procs.items()):
@@ -232,11 +271,26 @@ def pRUN(
         failed = False
         return []
     finally:
+        if failed:
+            # any exit before success — spawn failure, timeout, a rank's
+            # nonzero rc, result-collection error — must not orphan live
+            # workers (shm ranks would yield-spin until their recv
+            # timeout); kill is idempotent for already-dead ranks
+            for q in procs.values():
+                if q.poll() is None:
+                    q.kill()
         if rdzv_srv is not None:
             try:
                 rdzv_srv.close()  # stops the launcher's rendezvous thread
             except OSError:
                 pass
+        if shm_dir is not None:
+            # ALWAYS reclaimed, crash or not: arena files are shared
+            # memory, and unlike the comm-dir scratch there is nothing a
+            # post-mortem can read out of a half-consumed byte ring
+            import shutil
+
+            shutil.rmtree(shm_dir, ignore_errors=True)
         if own_dir:
             if failed:
                 # keep messages/results on disk for post-mortem — the
@@ -254,7 +308,7 @@ def pRUN(
 
 def prun_worker(target: str, argv: Sequence[str]) -> None:
     """Entry point inside each SPMD instance for ``module:function`` targets."""
-    from ..comm import get_context, init
+    from ..comm import init
 
     mod_name, fn_name = target.split(":", 1)
     ctx = init()

@@ -29,7 +29,7 @@ from .layers import (
 )
 from .mamba2 import (
     mamba2_block,
-    mamba2_decode_state,
+    mamba2_decode_state,  # noqa: F401  (re-exported: serve imports it here)
     mamba2_decode_step,
     mamba2_param_shapes,
     CONV_K,

@@ -534,3 +534,148 @@ class TestSelection:
         assert select_allgather(6) == "ring"
         assert select_gather(4) == "flat"
         assert select_gather(32) == "tree"
+
+    def test_transport_tuned_eager_default(self):
+        """A context can ship its own eager switch point (ShmComm's
+        256 KiB: intra-node bandwidth keeps the eager tree competitive
+        far past the 64 KiB wire default); the env var still wins."""
+        from repro.comm.collectives import DEFAULT_EAGER_BYTES, eager_bytes
+        from repro.comm.shmcomm import ShmComm
+
+        assert eager_bytes() == DEFAULT_EAGER_BYTES
+        shm_eager = ShmComm.coll_eager_default
+        assert shm_eager == 256 * 1024
+        # a 128 KiB payload rides the eager tree/rd on shm, ring elsewhere
+        assert select_bcast(128 << 10, 8) == "ring"
+        assert select_bcast(128 << 10, 8, eager=shm_eager) == "tree"
+        assert select_allreduce(128 << 10, 8) == "ring"
+        assert select_allreduce(128 << 10, 8, eager=shm_eager) == "rd"
+
+    def test_env_overrides_transport_default(self, monkeypatch):
+        monkeypatch.setenv("PPYTHON_COLL_EAGER_BYTES", "64")
+        assert select_bcast(128, 8, eager=256 * 1024) == "ring"
+        assert select_allreduce(128, 8, eager=256 * 1024) == "ring"
+
+
+# ---------------------------------------------------------------------------
+# allocation-free ring hops (ROADMAP "Collectives over irecv_into")
+# ---------------------------------------------------------------------------
+
+
+_STAGED_N, _STAGED_CALLS = 1000, 3
+
+
+def _staged_allreduce_body():
+    ctx = get_context()
+    g = world_group(ctx)
+    outs = []
+    for i in range(_STAGED_CALLS):
+        v = np.arange(_STAGED_N, dtype=np.float64) + ctx.pid + i
+        outs.append(g.allreduce(v, np.add, algo="ring"))
+    return outs
+
+
+class TestAllocationFreeRingHops:
+    """On serializing transports the ring allreduce hops run through
+    ``irecv_into`` with persistent per-group staging: no fresh receive
+    buffer per hop, and the staging is allocated once per group, not per
+    call (the ``exec_stats``-style counters make both observable).
+    By-reference transports keep the reference-circulating unstaged ring
+    — staging there would add a pin copy AND a landing copy per hop."""
+
+    @pytest.mark.parametrize("np_", [3, 4])
+    @pytest.mark.parametrize("transport", TRANSPORTS)
+    def test_ring_is_exact_and_staged_where_it_pays(self, transport, np_,
+                                                    tmp_path):
+        from repro.comm.collectives import coll_stats, reset_coll_stats
+
+        n, calls = _STAGED_N, _STAGED_CALLS
+        reset_coll_stats()
+        res = run_transport_spmd(_staged_allreduce_body, np_, transport,
+                                 comm_dir=tmp_path)
+        want = sum(np.arange(n, dtype=np.float64) + p for p in range(np_))
+        for outs in res:
+            for i, got in enumerate(outs):
+                _assert_same(got, want + np_ * i)
+        stats = coll_stats()
+        if transport == "thread":  # by-reference: unstaged by design
+            assert stats["ring_hops_into"] == 0
+            assert stats["ring_hops_alloc"] > 0
+        else:
+            # every hop of every call landed via irecv_into: 2*(P-1)
+            # hops per rank per call, zero fresh-buffer hops anywhere
+            assert stats["ring_hops_alloc"] == 0
+            assert stats["ring_hops_into"] == 2 * (np_ - 1) * np_ * calls
+
+    def test_staging_persists_across_calls(self):
+        from repro.comm.collectives import coll_stats, reset_coll_stats
+        from repro.comm.testing import run_shm_spmd
+
+        def body():
+            ctx = get_context()
+            g = world_group(ctx)
+            v = np.arange(500.0) * (ctx.pid + 1)
+            first = g.allreduce(v, np.add, algo="ring")
+            g.barrier()  # every rank past call 1 before the reset below
+            if ctx.pid == 0:
+                reset_coll_stats()
+            g.barrier()
+            second = g.allreduce(v, np.add, algo="ring")
+            g.barrier()  # every rank past call 2 before reading counters
+            return first, second
+
+        for first, second in run_shm_spmd(body, 4):
+            _assert_same(first, second)
+        # steady state reuses the per-group staging: call 2 allocated
+        # none, yet all its hops still landed via irecv_into
+        stats = coll_stats()
+        assert stats["staging_allocs"] == 0
+        assert stats["ring_hops_into"] == 2 * 3 * 4
+
+    def test_none_contributions_fall_back_and_stay_exact(self, spmd,
+                                                         monkeypatch):
+        """Mixed None/array worlds can't pre-post hop buffers (a hop may
+        carry None); auto mode detects it group-wide and takes the
+        unstaged ring, byte-identically."""
+        monkeypatch.setenv("PPYTHON_COLL_EAGER_BYTES", "64")
+        from repro.comm.collectives import coll_stats, reset_coll_stats
+
+        reset_coll_stats()
+        res = spmd(_mixed_none_ring_body, 4)
+        want = np.arange(2000, dtype=np.int64) * 2  # ranks 0 and 2
+        for got in res:
+            _assert_same(got, want)
+        # the leader held an array, so the ring ran — but unstaged
+        # (hops may carry None), so no hop pre-posted a buffer
+        stats = coll_stats()
+        assert stats["ring_hops_into"] == 0
+        assert stats["ring_hops_alloc"] > 0
+
+    def test_bcast_ring_lands_into_output(self, spmd, monkeypatch):
+        """Chunked-ring bcast receivers land every piece straight into
+        the single output allocation (no per-piece buffers)."""
+        monkeypatch.setenv("PPYTHON_COLL_EAGER_BYTES", "512")
+        from repro.comm.collectives import reset_coll_stats
+
+        reset_coll_stats()
+        res = spmd(_ring_bcast_body, 3)
+        want = np.arange(4000, dtype=np.float32) * 2
+        for got in res:
+            _assert_same(got, want)
+
+
+def _mixed_none_ring_body():
+    ctx = get_context()
+    g = world_group(ctx)
+    # the leader holds an array (ring gets selected); rank 1 and 3 are
+    # empty (None circulates on the hops)
+    v = (np.arange(2000, dtype=np.int64) * ctx.pid
+         if ctx.pid in (0, 2) else None)
+    return g.allreduce(v, np.add)
+
+
+def _ring_bcast_body():
+    ctx = get_context()
+    g = world_group(ctx)
+    v = np.arange(4000, dtype=np.float32) * 2 if ctx.pid == 0 else None
+    return g.bcast(v, root=0, algo="ring")

@@ -15,7 +15,13 @@ from pathlib import Path
 import numpy as np
 import pytest
 
-from repro.comm import CommContext, FileMPI, SocketComm, StragglerTimeout
+from repro.comm import (
+    CommContext,
+    FileMPI,
+    ShmComm,
+    SocketComm,
+    StragglerTimeout,
+)
 from repro.comm.rendezvous import bind_listener
 from repro.comm.testing import TRANSPORTS
 from repro.comm.threadcomm import ThreadComm, ThreadWorld
@@ -36,6 +42,11 @@ def ctxpair(request, tmp_path):
     if request.param == "file":
         pair = tuple(
             FileMPI(np_=2, pid=pid, comm_dir=tmp_path, heartbeat=False)
+            for pid in range(2)
+        )
+    elif request.param == "shm":
+        pair = tuple(
+            ShmComm(2, pid, tmp_path / "shm", nonce="ctxpair")
             for pid in range(2)
         )
     else:

@@ -1,7 +1,6 @@
 """Fault tolerance: rank restart, straggler detection, elastic restore."""
 
 import os
-import time
 from pathlib import Path
 
 import numpy as np

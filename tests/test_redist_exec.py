@@ -11,8 +11,6 @@ including empty intersections and ragged (non-lowerable) cyclic index
 sets.
 """
 
-import os
-
 import numpy as np
 import pytest
 

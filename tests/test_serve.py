@@ -13,7 +13,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ARCH_IDS, get_config
+from repro.configs import get_config
 from repro.models import (
     decode_step,
     init_decode_state,

@@ -1,0 +1,341 @@
+"""ShmComm: the mmap'd ring-arena transport, beyond the generic matrix.
+
+The collectives/redistribution/async suites already run on shm through
+``TRANSPORTS``; this file covers what only this transport has: the ring
+arena itself (seqlock cursors, wraparound, capacity chunking), the
+``irecv_into`` straight-into-caller-memory landing, arena lifecycle
+(finalize unlink, pRUN crash cleanup, stale-directory reuse), the
+run-nonce attach guard, and the ``init()``/pRUN env wiring.
+"""
+
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.comm import ShmComm, StragglerTimeout
+from repro.comm.shmcomm import _Arena, _nonce_u64, arena_paths
+
+
+@pytest.fixture
+def pair(tmp_path):
+    ctxs = tuple(ShmComm(2, pid, tmp_path, nonce="t") for pid in range(2))
+    yield ctxs
+    for c in ctxs:
+        c.finalize()
+
+
+# ---------------------------------------------------------------------------
+# the arena ring
+# ---------------------------------------------------------------------------
+
+
+class TestArena:
+    def test_create_publishes_whole_header(self, tmp_path):
+        a = _Arena.create(tmp_path / "a.ring", 8192, 7)
+        b = _Arena.attach(tmp_path / "a.ring", 7)
+        assert b is not None and b.cap == 8192
+        a.close()
+        b.close()
+
+    def test_attach_rejects_wrong_nonce_and_garbage(self, tmp_path):
+        _Arena.create(tmp_path / "a.ring", 4096, _nonce_u64("run1")).close()
+        assert _Arena.attach(tmp_path / "a.ring", _nonce_u64("run2")) is None
+        (tmp_path / "junk.ring").write_bytes(b"not an arena")
+        assert _Arena.attach(tmp_path / "junk.ring", 0) is None
+        assert _Arena.attach(tmp_path / "missing.ring", 0) is None
+
+    def test_ring_wraparound_traffic(self, tmp_path):
+        """Payloads far beyond capacity stream through the ring: the
+        cursors are monotonic, only offsets wrap."""
+        os.environ["PPYTHON_SHM_ARENA_BYTES"] = "8192"
+        try:
+            a, b = (ShmComm(2, pid, tmp_path, nonce="w") for pid in range(2))
+        finally:
+            del os.environ["PPYTHON_SHM_ARENA_BYTES"]
+        try:
+            for i in range(50):
+                payload = np.arange(i * 37 % 1500, dtype=np.int32)
+                a.send(1, ("wrap", i % 3), payload)
+                got = b.recv(0, ("wrap", i % 3), timeout=20)
+                assert got.tobytes() == payload.tobytes(), i
+            assert a._out[1].head > 8192  # really wrapped
+        finally:
+            a.finalize()
+            b.finalize()
+
+    def test_oversize_payload_chunks_through_small_arena(self, tmp_path):
+        """A payload far beyond ring capacity streams as chunk records.
+        The consumer must be live (a bounded ring cannot buffer 512 KB),
+        so sender and receiver run on their own threads — exactly the
+        deployment shape."""
+        os.environ["PPYTHON_SHM_ARENA_BYTES"] = "65536"
+        try:
+            from repro.comm import get_context
+            from repro.comm.testing import run_shm_spmd
+
+            def body():
+                ctx = get_context()
+                big = np.arange(1 << 19, dtype=np.uint8)  # 512 KB
+                if ctx.pid == 0:
+                    ctx.send(1, "big", big)
+                    return True
+                got = ctx.recv(0, "big", timeout=60)
+                return got.tobytes() == big.tobytes()
+
+            assert run_shm_spmd(body, 2, timeout=90,
+                                shm_dir=tmp_path) == [True, True]
+        finally:
+            del os.environ["PPYTHON_SHM_ARENA_BYTES"]
+
+    def test_self_send_round_trips(self, pair):
+        """No (p, p) ring exists; self-sends round-trip in memory with
+        the same private-writable-payload semantics as a ring delivery
+        (FileMPI supports self-sends — the contract holds here too)."""
+        tx, _ = pair
+        src = np.arange(100.0)
+        tx.send(0, "self", src)
+        tx.send(0, "self", {"k": 7})
+        got = tx.recv(0, "self", timeout=5)
+        assert got.tobytes() == src.tobytes()
+        got += 1.0  # private and writable, not an alias of src
+        assert src[0] == 0.0
+        assert tx.recv(0, "self", timeout=5) == {"k": 7}
+
+    def test_mutual_flood_does_not_deadlock(self, tmp_path):
+        """Both endpoints fill each other's rings before either receives:
+        the sender's wait-for-space loop drains its own inbound arenas,
+        so mutually full rings always make progress."""
+        os.environ["PPYTHON_SHM_ARENA_BYTES"] = "32768"
+        try:
+            ctxs = [ShmComm(2, pid, tmp_path, nonce="f") for pid in range(2)]
+        finally:
+            del os.environ["PPYTHON_SHM_ARENA_BYTES"]
+        import threading
+
+        errs = []
+
+        def body(me):
+            ctx = ctxs[me]
+            other = me ^ 1
+            try:
+                big = np.arange(1 << 16, dtype=np.uint8)
+                for i in range(6):
+                    ctx.send(other, ("fl", i), big + (me + i))
+                for i in range(6):
+                    got = ctx.recv(other, ("fl", i), timeout=60)
+                    assert got.tobytes() == (big + (other + i)).tobytes()
+            except BaseException as e:  # noqa: BLE001
+                errs.append(e)
+
+        ts = [threading.Thread(target=body, args=(m,)) for m in range(2)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(90)
+        for c in ctxs:
+            c.finalize()
+        assert not errs, errs
+
+
+# ---------------------------------------------------------------------------
+# irecv_into: the zero-receive-copy landing
+# ---------------------------------------------------------------------------
+
+
+class TestRecvInto:
+    def test_payload_resolves_straight_into_buffer(self, pair):
+        tx, rx = pair
+        buf = np.empty(1000, dtype=np.float64)
+        req = rx.irecv_into(0, "into", buf)
+        assert list(rx._recv_into_bufs.values()) == [buf]  # pre-registered
+        tx.send(1, "into", np.arange(1000.0))
+        out = req.wait(10)
+        assert out is buf
+        np.testing.assert_array_equal(buf, np.arange(1000.0))
+        assert not rx._recv_into_bufs  # registration consumed by the drain
+
+    def test_message_racing_ahead_of_post_still_lands(self, pair):
+        tx, rx = pair
+        tx.send(1, "race", np.arange(64.0))
+        deadline = time.monotonic() + 10
+        while not rx.probe(0, "race"):  # probe drains the rings
+            assert time.monotonic() < deadline, "message never drained"
+            time.sleep(0.001)
+        buf = np.empty(64, dtype=np.float64)
+        out = rx.irecv_into(0, "race", buf).wait(10)
+        assert out is buf and buf[-1] == 63.0
+
+    def test_timeout_drops_registration(self, pair):
+        _, rx = pair
+        buf = np.empty(8, dtype=np.float64)
+        req = rx.irecv_into(0, "late", buf)
+        with pytest.raises(StragglerTimeout):
+            req.wait(0.05)
+        assert not rx._recv_into_bufs  # a late message must not scribble
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: finalize, stale-directory reuse, crash cleanup
+# ---------------------------------------------------------------------------
+
+
+class TestLifecycle:
+    def test_finalize_unlinks_inbound_arenas(self, tmp_path):
+        ctxs = [ShmComm(3, pid, tmp_path, nonce="fin") for pid in range(3)]
+        assert len(list(tmp_path.glob("arena_*.ring"))) == 6
+        for c in ctxs:
+            c.finalize()
+        assert list(tmp_path.glob("arena_*.ring")) == []
+
+    def test_stale_arena_files_are_replaced_not_served(self, tmp_path):
+        """A dead run's arenas (valid headers, old nonce, leftover bytes)
+        sit in a reused directory: the new world must replace them and
+        message cleanly — senders can never attach to the stale ring."""
+        from repro.comm.shmcomm import _ARENA_HDR
+
+        old = [
+            _Arena.create(p, 4096, _nonce_u64("dead-run"))
+            for p in arena_paths(tmp_path, 2, 0)
+            + arena_paths(tmp_path, 2, 1)
+        ]
+        for a in old:
+            a.copy_in(b"stale garbage that must never be decoded")
+            a.publish_head()
+            a.close()
+        ctxs = [ShmComm(2, pid, tmp_path, nonce="live") for pid in range(2)]
+        try:
+            for p in tmp_path.glob("arena_*.ring"):
+                hdr = _ARENA_HDR.unpack(
+                    p.read_bytes()[: _ARENA_HDR.size])
+                assert hdr[2] == _nonce_u64("live")  # fresh header
+                assert hdr[3] == 0  # fresh ring: the stale bytes are gone
+            ctxs[0].send(1, "ok", np.arange(10))
+            assert ctxs[1].recv(0, "ok", timeout=10).sum() == 45
+        finally:
+            for c in ctxs:
+                c.finalize()
+
+    def test_sender_waits_for_matching_nonce(self, tmp_path):
+        """An attacher offered only a stale-nonce arena keeps retrying
+        until its deadline instead of writing into the dead ring."""
+        _Arena.create(tmp_path / "arena_s0_d1.ring", 4096,
+                      _nonce_u64("dead-run")).close()
+        ctx = ShmComm(2, 0, tmp_path, nonce="live")
+        try:
+            os.environ["PPYTHON_RECV_TIMEOUT"] = "0.3"
+            with pytest.raises(StragglerTimeout, match="no live arena"):
+                ctx.send(1, "x", 1)
+        finally:
+            del os.environ["PPYTHON_RECV_TIMEOUT"]
+            ctx.finalize()
+
+
+# ---------------------------------------------------------------------------
+# init() env wiring + pRUN plumbing (real processes)
+# ---------------------------------------------------------------------------
+
+
+class TestInitWiring:
+    def test_init_selects_shm_transport(self, tmp_path):
+        """Real processes through init(): PPYTHON_TRANSPORT=shm + a shm
+        dir is all the env wiring a rank needs."""
+        code = (
+            "import numpy as np, sys\n"
+            "from repro.comm import init\n"
+            "ctx = init()\n"
+            "assert type(ctx).__name__ == 'ShmComm', type(ctx)\n"
+            "if ctx.pid == 0:\n"
+            "    ctx.send(1, 'x', np.arange(8))\n"
+            "else:\n"
+            "    s = int(ctx.recv(0, 'x', timeout=30).sum())\n"
+            "    open(sys.argv[1], 'w').write(str(s))\n"
+            "ctx.finalize()\n"
+        )
+        out = tmp_path / "result.txt"
+        env = dict(
+            os.environ,
+            PPYTHON_TRANSPORT="shm",
+            PPYTHON_NP="2",
+            PPYTHON_SHM_DIR=str(tmp_path / "shm"),
+            PPYTHON_SHM_NONCE="init-test",
+        )
+        procs = [
+            subprocess.Popen(
+                [sys.executable, "-c", code, str(out)],
+                env=dict(env, PPYTHON_PID=str(pid)),
+            )
+            for pid in range(2)
+        ]
+        assert [p.wait(timeout=60) for p in procs] == [0, 0]
+        assert out.read_text() == "28"
+        # both ranks finalized: no arena left behind
+        assert list((tmp_path / "shm").glob("arena_*.ring")) == []
+
+    def test_init_derives_dir_from_comm_dir(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("PPYTHON_TRANSPORT", "shm")
+        monkeypatch.setenv("PPYTHON_NP", "2")
+        monkeypatch.setenv("PPYTHON_PID", "0")
+        monkeypatch.setenv("PPYTHON_COMM_DIR", str(tmp_path))
+        monkeypatch.delenv("PPYTHON_SHM_DIR", raising=False)
+        from repro.comm import context as ctx_mod
+
+        ctx = ctx_mod.init()
+        try:
+            assert isinstance(ctx, ShmComm)
+            assert ctx.dir == tmp_path / "shm"
+        finally:
+            ctx.finalize()
+            ctx_mod._global_ctx = None
+
+    def test_init_requires_some_dir(self, monkeypatch):
+        monkeypatch.setenv("PPYTHON_TRANSPORT", "shm")
+        monkeypatch.setenv("PPYTHON_NP", "2")
+        monkeypatch.setenv("PPYTHON_PID", "0")
+        monkeypatch.delenv("PPYTHON_SHM_DIR", raising=False)
+        monkeypatch.delenv("PPYTHON_COMM_DIR", raising=False)
+        from repro.comm import context as ctx_mod
+
+        with pytest.raises(ValueError, match="PPYTHON_SHM_DIR"):
+            ctx_mod.init()
+
+
+def _shm_dirs() -> set:
+    base = Path("/dev/shm")
+    if not base.is_dir():
+        return set()
+    return {p.name for p in base.glob("ppython_shm_*")}
+
+
+@pytest.mark.slow
+class TestPRunShm:
+    def test_shm_processes_end_to_end(self):
+        from repro.launch import pRUN
+
+        before = _shm_dirs()
+        res = pRUN("repro.launch._selftest:pingpong", 2, transport="shm",
+                   timeout=120.0)
+        assert res[0] == float((np.arange(1000.0) * 2).sum())
+        assert _shm_dirs() == before  # arena dir reclaimed on clean exit
+
+    def test_crash_still_reclaims_arena_dir(self):
+        """Worker death must not leak shared memory: the launcher removes
+        the arena directory even when the launch fails."""
+        from repro.launch import pRUN
+
+        before = _shm_dirs()
+        with pytest.raises(RuntimeError, match="exited with code 3"):
+            pRUN("repro.launch._selftest:crash_on_rank1", 2,
+                 transport="shm", timeout=120.0)
+        assert _shm_dirs() == before
+
+    def test_shm_rejects_restarts(self):
+        from repro.launch import pRUN
+
+        with pytest.raises(ValueError, match="restart"):
+            pRUN("repro.launch._selftest:pingpong", 2, transport="shm",
+                 restarts=1)

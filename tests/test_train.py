@@ -12,7 +12,7 @@ from repro.models import init_params
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update, lr_schedule
 from repro.train.train_step import TrainStepConfig, init_opt_state, make_train_step
 from repro.train.data import batch_iterator, host_shard, synthetic_batch
-from repro.train.checkpoint import CheckpointManager, reshard_read, save_tree
+from repro.train.checkpoint import CheckpointManager, reshard_read
 
 
 class TestSchedules:
