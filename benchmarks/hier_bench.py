@@ -1,0 +1,272 @@
+"""Topology-aware fabric benchmark: HierComm vs flat SocketComm.
+
+The tentpole claim of the composite transport is that a multi-node job
+should pay wire latency only on the node-to-node legs.  This benchmark
+measures exactly that on **real pRUN worker processes** (the deployment
+both fabrics exist for — same harness as ``pingpong.py``): np=8 ranks
+split into 2 *virtual nodes* run the auto-selected collectives twice —
+once over flat ``SocketComm`` (``pRUN(transport="socket")``: every
+message is a loopback TCP round trip) and once over ``HierComm``
+(``pRUN(transport="hier", nodes=2)``: shm arenas within a virtual node,
+TCP between the two node leaders, the collectives two-level) — and
+reports per-op speedups.  One process set per (fabric, repeat) sweeps
+every (op, size) cell, so launch overhead never lands in a timing.
+
+The acceptance bar is a geomean allreduce speedup >= 2x across payloads
+<= 256 KB at np=8 over 2 virtual nodes; ``--check`` enforces it on a
+committed ``BENCH_hier.json``.
+
+``--smoke`` is the CI mode: np=4 over 2 virtual nodes on the in-process
+thread harness, no timing.  It asserts the routing property (every
+intra-node message counted against the shm fabric, every inter-node
+message against tcp, via the ``fabric_sends`` counters), topology
+attributes, and bit-exactness of every two-level collective against its
+flat forced-algorithm counterpart.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/hier_bench.py [--np 8] [--nodes 2]
+        [--sizes 65536,131072,262144] [--iters 20] [--out BENCH_hier.json]
+    PYTHONPATH=src python benchmarks/hier_bench.py --check   # enforce bar
+    PYTHONPATH=src python benchmarks/hier_bench.py --smoke   # CI mode
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.comm import get_context, world_group
+from repro.comm.testing import run_hier_spmd
+from repro.launch.prun import pRUN
+
+try:
+    from benchmarks.bench_json import bench_record, write_bench_json
+except ImportError:  # invoked as a script: benchmarks/ is sys.path[0]
+    from bench_json import bench_record, write_bench_json
+
+# the bar is evaluated on allreduce only; the rest are reported context
+OPS = ("allreduce", "bcast", "allgather", "barrier")
+BAR_MAX_BYTES = 256 * 1024
+BAR_SPEEDUP = 2.0
+
+
+def _collective(g, op, x):
+    if op == "allreduce":
+        return g.allreduce(x, np.add)
+    if op == "bcast":
+        return g.bcast(x if g.rank == 0 else None, root=0)
+    if op == "allgather":
+        return g.allgather(x)
+    if op == "barrier":
+        return g.barrier()
+    raise ValueError(op)
+
+
+def _sweep_body(ops_csv: str, sizes_csv: str, iters_s: str) -> dict:
+    """SPMD body: time every (op, size) cell on this world's transport.
+
+    Returns ``{"op/nbytes": seconds_per_call}``; string args so it runs
+    identically under pRUN workers and the thread harness."""
+    iters = int(iters_s)
+    g = world_group(get_context())
+    out = {}
+    for op in ops_csv.split(","):
+        sizes = [0] if op == "barrier" else \
+            [int(s) for s in sizes_csv.split(",") if s]
+        for nbytes in sizes:
+            n = max(1, nbytes // 8)
+            x = np.arange(n, dtype=np.float64) + g.rank
+            _collective(g, op, x)  # warm-up validates the cell end to end
+            g.barrier()
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                _collective(g, op, x)
+            g.barrier()
+            out[f"{op}/{nbytes}"] = (time.perf_counter() - t0) / iters
+    return out
+
+
+def _run_fabric(fabric: str, np_: int, nodes: int, sizes, iters) -> dict:
+    """One worker-process set sweeping every cell; per-cell max over
+    ranks (a collective is only as done as its slowest rank)."""
+    bench_dir = str(Path(__file__).resolve().parent)
+    pypath = os.environ.get("PYTHONPATH", "")
+    kwargs = {"transport": "socket"} if fabric == "socket" else \
+        {"transport": "hier", "nodes": nodes}
+    res = pRUN(
+        "hier_bench:_sweep_body", np_,
+        args=(",".join(OPS), ",".join(str(s) for s in sizes), str(iters)),
+        timeout=600.0,
+        env={"PYTHONPATH": f"{bench_dir}:{pypath}" if pypath else bench_dir},
+        **kwargs,
+    )
+    return {cell: max(r[cell] for r in res) for cell in res[0]}
+
+
+def bench(np_, nodes, sizes, iters, repeats=3) -> list[dict]:
+    # best-of-N process sets: scheduling noise on oversubscribed boxes
+    # only ever inflates a run, so the min is the signal
+    best: dict[str, dict[str, float]] = {}
+    for fabric in ("socket", "hier"):
+        for _ in range(repeats):
+            for cell, t in _run_fabric(fabric, np_, nodes, sizes,
+                                       iters).items():
+                cur = best.setdefault(fabric, {}).get(cell)
+                best[fabric][cell] = t if cur is None else min(cur, t)
+    rows = []
+    for op in OPS:
+        for nbytes in [0] if op == "barrier" else sizes:
+            cell = f"{op}/{nbytes}"
+            flat_t, hier_t = best["socket"][cell], best["hier"][cell]
+            row = {
+                "op": op,
+                "np": np_,
+                "nodes": nodes,
+                "nbytes": nbytes,
+                "flat_socket_us": round(flat_t * 1e6, 1),
+                "hier_us": round(hier_t * 1e6, 1),
+                "speedup_vs_flat": round(flat_t / hier_t, 2),
+            }
+            rows.append(row)
+            print(f"{op:>10} {nbytes:>8}B  flat {row['flat_socket_us']:>9}us"
+                  f"  hier {row['hier_us']:>9}us"
+                  f"  {row['speedup_vs_flat']}x", flush=True)
+    return rows
+
+
+def geomean_allreduce(rows) -> float:
+    bar_rows = [r for r in rows
+                if r["op"] == "allreduce" and r["nbytes"] <= BAR_MAX_BYTES]
+    return math.exp(
+        sum(math.log(r["speedup_vs_flat"]) for r in bar_rows) / len(bar_rows)
+    )
+
+
+def check(path) -> int:
+    """Enforce the acceptance bar on a committed artifact."""
+    with open(path) as f:
+        record = json.load(f)
+    geo = record.get("geomean_allreduce_speedup_le_256k")
+    np_, nodes = record.get("np"), record.get("nodes")
+    ok = (geo is not None and geo >= BAR_SPEEDUP
+          and np_ == 8 and nodes == 2)
+    print(f"{path}: np={np_} nodes={nodes} allreduce geomean (<=256KB) = "
+          f"{geo}x ({'meets' if ok else 'BELOW'} the {BAR_SPEEDUP}x bar)")
+    return 0 if ok else 1
+
+
+# ---------------------------------------------------------------------------
+# --smoke: routing property + two-level bit-exactness (CI)
+# ---------------------------------------------------------------------------
+
+
+def _smoke_body():
+    ctx = get_context()
+    me, np_ = ctx.pid, ctx.np_
+    # -- routing property: one message per ordered peer pair, intra-node
+    # counted against shm and inter-node against tcp, nothing else moves
+    before = dict(ctx.fabric_sends)
+    for peer in range(np_):
+        if peer != me:
+            ctx.send(peer, ("route", me), me)
+    got = sorted(ctx.recv(p, ("route", p)) for p in range(np_) if p != me)
+    assert got == [p for p in range(np_) if p != me], got
+    shm_n = ctx.fabric_sends["shm"] - before["shm"]
+    tcp_n = ctx.fabric_sends["tcp"] - before["tcp"]
+    intra = len(ctx.node_peers) - 1
+    assert shm_n == intra, (shm_n, intra)
+    assert tcp_n == (np_ - 1) - intra, (tcp_n, np_ - 1 - intra)
+    for peer in range(np_):
+        want = "shm" if ctx.node_ids[peer] == ctx.node_id else "tcp"
+        assert ctx.fabric_of(peer) == want, (peer, want)
+    # -- two-level collectives are bit-exact vs the forced flat paths
+    g = world_group(ctx)
+    x = (np.arange(512, dtype=np.int64) + 7) * (me + 1)
+    want_sum = sum((np.arange(512, dtype=np.int64) + 7) * (r + 1)
+                   for r in range(np_))
+    auto = g.allreduce(x, np.add)
+    assert auto.tobytes() == want_sum.tobytes(), "allreduce/two-level"
+    flat = g.allreduce(x, np.add, algo="ring")
+    assert auto.tobytes() == flat.tobytes(), "allreduce two-level vs flat"
+    root = np_ - 1  # non-leader root exercises the root->leader hop
+    b = g.bcast(x if g.rank == root else None, root=root)
+    assert b.tobytes() == ((np.arange(512, dtype=np.int64) + 7)
+                           * np_).tobytes(), "bcast/two-level"
+    ag = g.allgather(int(me) * 10)
+    assert ag == [r * 10 for r in range(np_)], "allgather/two-level"
+    rs = g.reduce_scatter(x, np.add)
+    assert rs.tobytes() == np.array_split(want_sum, np_)[me].tobytes(), \
+        "reduce_scatter/two-level"
+    g.barrier()
+    return dict(ctx.fabric_sends)
+
+
+def smoke(np_=4, nodes=2) -> int:
+    try:
+        stats = run_hier_spmd(_smoke_body, np_, timeout=300.0, nodes=nodes)
+    except Exception as e:  # noqa: BLE001 - smoke must report, not die
+        print(f"SMOKE FAILURE: {type(e).__name__}: {e}")
+        return 1
+    total_shm = sum(s["shm"] for s in stats)
+    total_tcp = sum(s["tcp"] for s in stats)
+    if not total_shm or not total_tcp:
+        print(f"SMOKE FAILURE: a fabric sat idle (shm={total_shm}, "
+              f"tcp={total_tcp})")
+        return 1
+    print(f"hier smoke OK (np={np_}, nodes={nodes}: routing property + "
+          f"two-level bit-exactness; {total_shm} shm / {total_tcp} tcp "
+          f"messages)")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--np", type=int, default=8, dest="np_")
+    ap.add_argument("--nodes", type=int, default=2,
+                    help="virtual nodes the ranks are split across")
+    ap.add_argument("--sizes", default="65536,131072,262144",
+                    help="comma-separated payload bytes (default spans the "
+                         "flat transports' eager-to-rendezvous transition)")
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="best-of-N process sets per fabric")
+    ap.add_argument("--out", default="BENCH_hier.json")
+    ap.add_argument("--check", action="store_true",
+                    help="validate the bar on an existing artifact")
+    ap.add_argument("--smoke", action="store_true",
+                    help="np=4 routing + bit-exactness oracles (CI mode)")
+    args = ap.parse_args()
+    if args.smoke:
+        return smoke()
+    if args.check:
+        return check(args.out)
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    rows = bench(args.np_, args.nodes, sizes, args.iters,
+                 repeats=args.repeats)
+    geo = round(geomean_allreduce(rows), 2)
+    write_bench_json(args.out, bench_record(
+        "hier",
+        rows,
+        np=args.np_,
+        nodes=args.nodes,
+        procs=True,
+        geomean_allreduce_speedup_le_256k=geo,
+        bar=f"allreduce geomean >= {BAR_SPEEDUP}x over flat socket "
+            f"(payloads <= {BAR_MAX_BYTES // 1024} KB, real pRUN workers)",
+    ))
+    ok = geo >= BAR_SPEEDUP
+    print(f"allreduce geomean (<=256KB): {geo}x "
+          f"({'meets' if ok else 'BELOW'} the {BAR_SPEEDUP}x bar)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -315,25 +315,45 @@ def bench_hpl(np_list=(1, 2, 4)) -> list[dict]:
 
 
 # ---------------------------------------------------------------------------
-# Artifact entry point: STREAM + FFT -> BENCH_hpcc.json
+# Artifact entry point: the full HPCC suite -> BENCH_hpcc.json
 # ---------------------------------------------------------------------------
 
 
+_SUITES = (
+    ("stream", bench_stream),
+    ("fft", bench_fft),
+    ("randomaccess", bench_random_access),
+    ("hpl", bench_hpl),
+)
+
+
 def main() -> int:
-    """Run the paper's bandwidth (STREAM triad, Fig 7) and communication
-    (FFT with corner turn, Fig 8) kernels and persist ``BENCH_hpcc.json``
-    through the shared bench-JSON helper — the HPCC trajectory the perf
+    """Run the full HPC Challenge suite from the paper — STREAM triad
+    (Fig 7, bandwidth), FFT with corner turn (Fig 8, redistribution),
+    RandomAccess (Fig 9, latency-bound all-to-all GUPS), and HPL (Fig 10,
+    blocked LU with panel broadcast) — and persist ``BENCH_hpcc.json``
+    through the shared bench-JSON helper: the HPCC trajectory the perf
     PRs are measured against.  The FFT rows exercise the redistribution
-    engine end to end: its corner turn is a cached-plan coalesced
-    ``Z[:, :] = X`` every iteration."""
+    engine end to end (the corner turn is a cached-plan coalesced
+    ``Z[:, :] = X`` every iteration); HPL exercises ``scatter``/``agg``
+    through the lowered strided-view paths."""
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--np-list", default="1,2,4",
                     help="comma-separated world sizes")
+    ap.add_argument("--suites", default=",".join(s for s, _ in _SUITES),
+                    help="comma-separated subset of "
+                         + "/".join(s for s, _ in _SUITES))
     ap.add_argument("--out", default="BENCH_hpcc.json")
     args = ap.parse_args()
     np_list = tuple(int(x) for x in args.np_list.split(",") if x)
+    picked = {s.strip() for s in args.suites.split(",") if s.strip()}
+    unknown = picked - {s for s, _ in _SUITES}
+    if unknown:
+        ap.error(f"unknown suites: {sorted(unknown)}")
     rows = []
-    for title, fn in (("stream", bench_stream), ("fft", bench_fft)):
+    for title, fn in _SUITES:
+        if title not in picked:
+            continue
         print(f"# {title}", file=sys.stderr)
         for row in fn(np_list):
             rows.append(row)
@@ -345,13 +365,19 @@ def main() -> int:
         from bench_json import bench_record, write_bench_json
     from repro.core import plan_cache_stats
 
+    cfg = hpcc_config()
     stats = plan_cache_stats()
     write_bench_json(args.out, bench_record(
         "hpcc",
         rows,
         config={"np_list": list(np_list),
-                "stream_elems_per_proc": hpcc_config().stream_elems_per_proc,
-                "fft_side": hpcc_config().fft_side},
+                "suites": sorted(picked),
+                "stream_elems_per_proc": cfg.stream_elems_per_proc,
+                "fft_side": cfg.fft_side,
+                "ra_table_bits": cfg.ra_table_bits,
+                "ra_updates_per_proc": cfg.ra_updates_per_proc,
+                "hpl_n": cfg.hpl_n,
+                "hpl_block": cfg.hpl_block},
         redist={k: stats[k] for k in
                 ("hits", "misses", "hit_rate", "messages", "bytes",
                  "copies") if k in stats},

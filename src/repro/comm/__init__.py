@@ -1,7 +1,7 @@
 """PythonMPI — pPython's messaging layer (paper §III.D).
 
-Five interchangeable transports behind one interface
-(``PPYTHON_TRANSPORT=file|socket|shm|thread`` selects at ``init()``):
+Six interchangeable transports behind one interface
+(``PPYTHON_TRANSPORT=file|socket|shm|hier|thread`` selects at ``init()``):
 
 * ``FileMPI``   — the paper's transport: pickle payloads through a shared
                   filesystem, one-sided (a send never waits for its receive),
@@ -12,14 +12,18 @@ Five interchangeable transports behind one interface
 * ``ShmComm``   — single-node multi-process over per-peer mmap'd ring
                   arenas (``/dev/shm``-backed by pRUN): one copy each way,
                   zero receive-side copy under ``irecv_into``.
+* ``HierComm``  — topology-aware composite: shm arenas between ranks on
+                  the same node, TCP across nodes, one fabric per peer
+                  pair (``PPYTHON_NODE_ID`` partitions virtual nodes).
 * ``ThreadComm``— in-process queues; used by tests/benchmarks to run SPMD
                   codes without process-launch overhead.
 * ``LocalComm`` — Np=1 degenerate context (every op is a no-op/self-copy).
 
 On top of the point-to-point primitives, ``collectives.py`` provides the
 scalable collective algorithms (binomial tree, recursive doubling, ring,
-pairwise exchange, dissemination) with message-size-based selection and
-``Group`` sub-communicators for any rank subset; the serializing
+pairwise exchange, dissemination) with message-size-based selection,
+``Group`` sub-communicators for any rank subset, and two-level
+topology-aware algorithms over ``HierComm``; the serializing
 transports share one pickle-5 out-of-band frame format (``comm/frame.py``).
 
 This package is intentionally NumPy-only (no JAX import): pRUN workers must
@@ -43,6 +47,7 @@ from .context import (
     set_context,
 )
 from .filempi import FileMPI
+from .hiercomm import HierComm
 from .shmcomm import ShmComm
 from .socketcomm import SocketComm
 from .threadcomm import ThreadComm, run_spmd
@@ -50,6 +55,7 @@ from .threadcomm import ThreadComm, run_spmd
 __all__ = [
     "CommContext",
     "FileMPI",
+    "HierComm",
     "LocalComm",
     "ShmComm",
     "SocketComm",

@@ -41,7 +41,21 @@ tiny tree header before a ring transfer — and the local value for
 any ``Dmap.proclist``, including non-contiguous, permuted, and
 non-zero-rooted lists — with tags derived from a per-(group, op) SPMD
 counter, so concurrent collectives on disjoint or identical groups can
-never cross-match message streams.
+never cross-match message streams.  ``Group.split(color, key)`` derives
+sub-communicators MPI_Comm_split-style.
+
+Topology awareness: when the context exposes ``node_ids`` (HierComm —
+shm within a node, TCP across nodes) and a group spans more than one
+node with at least one non-singleton node, auto-mode ``allreduce``,
+``bcast``, ``barrier``, ``allgather``, and ``reduce_scatter`` switch to
+two-level algorithms — the intra-node leg runs over shared memory and
+only node *leaders* (the first group-order member of each node) touch
+the wire.  Allreduce, e.g., becomes intra-node reduce → inter-node
+allreduce among leaders → intra-node bcast: the TCP leg moves one
+payload per node instead of one per rank.  An explicit ``algo=`` always
+bypasses the two-level path, and the sub-phases reuse the flat
+machinery below (so persistent staging and ``irecv_into`` still apply
+within each level).
 
 Buffer semantics: on by-reference transports (ThreadComm) every hop
 copies *mutable* ndarray payloads before posting (``_pin``), so a
@@ -257,6 +271,10 @@ def _combine(op: Callable, a: Any, b: Any) -> Any:
     return op(a, b)
 
 
+# sentinel for Group._topo: "not derived yet" (None means "flat")
+_TOPO_UNSET = object()
+
+
 class Group:
     """Ordered subset of a context's ranks with its own collective scope.
 
@@ -287,6 +305,7 @@ class Group:
         # (``group_of``), so steady-state iterative collectives reuse
         # these across calls and allocate nothing per hop
         self._staging: dict[tuple, np.ndarray] = {}
+        self._topo: Any = _TOPO_UNSET
 
     def __repr__(self) -> str:
         return f"Group(ranks={list(self.ranks)}, rank={self.rank})"
@@ -356,6 +375,211 @@ class Group:
             _coll_stats.add(staging_allocs=1)
         return buf
 
+    # -- topology (two-level selection over HierComm) ----------------------
+
+    def _hier_parts(self) -> tuple[tuple[int, ...], tuple[int, ...]] | None:
+        """``(intra_pids, leader_pids)`` when this group's topology is
+        non-flat, else ``None``.
+
+        Derived (once, cached) from the context's ``node_ids`` — only the
+        composite transport exposes it.  ``intra_pids`` are this rank's
+        node-mates in group order (leader first), ``leader_pids`` the
+        first group-order member of every node in first-appearance order;
+        both are pure functions of ``(ranks, node_ids)``, so every member
+        computes the identical partition with zero communication.  Flat
+        means: no topology, a single node, or every node a singleton
+        (two-level would only add hops)."""
+        topo = self._topo
+        if topo is _TOPO_UNSET:
+            node_ids = getattr(self.ctx, "node_ids", None)
+            if node_ids is None:
+                topo = None
+            else:
+                nodes: dict[int, list[int]] = {}
+                for pid in self.ranks:
+                    nodes.setdefault(node_ids[pid], []).append(pid)
+                if len(nodes) < 2 or all(len(m) == 1 for m in nodes.values()):
+                    topo = None
+                else:
+                    topo = (tuple(nodes[node_ids[self.ctx.pid]]),
+                            tuple(m[0] for m in nodes.values()))
+            self._topo = topo
+        return topo
+
+    def _node_granks(self) -> list[list[int]]:
+        """Group ranks per node, in node first-appearance (= leader) order
+        — the global view a leader needs to address every node's chunks."""
+        node_ids = self.ctx.node_ids
+        nodes: dict[int, list[int]] = {}
+        for g, pid in enumerate(self.ranks):
+            nodes.setdefault(node_ids[pid], []).append(g)
+        return list(nodes.values())
+
+    def split(self, color: Any, key: int = 0) -> "Group | None":
+        """MPI_Comm_split: members with equal ``color`` form a new group,
+        ordered by ``(key, group rank)``.  ``color=None`` opts out (the
+        rank still participates in the exchange, returns ``None``).
+
+        One allgather of the tiny ``(color, key)`` pairs; the subgroup
+        comes from the memoized ``group_of`` cache, so repeated splits
+        with the same coloring reuse one ``Group`` and its counters."""
+        me = self._require_member()
+        infos = self.allgather((color, int(key)), tag=None)
+        if color is None:
+            return None
+        mine = sorted(
+            (k, g) for g, (c, k) in enumerate(infos)
+            if c is not None and c == color
+        )
+        return group_of(self.ctx, tuple(self.ranks[g] for _k, g in mine))
+
+    def split_by_node(self) -> "Group":
+        """This rank's intra-node subgroup (the whole group when the
+        context has no topology) — no communication, unlike ``split``."""
+        parts = self._hier_parts()
+        if parts is None:
+            node_ids = getattr(self.ctx, "node_ids", None)
+            if node_ids is None:
+                return self
+            mine = tuple(p for p in self.ranks
+                         if node_ids[p] == node_ids[self.ctx.pid])
+            return group_of(self.ctx, mine)
+        return group_of(self.ctx, parts[0])
+
+    # -- two-level algorithms ----------------------------------------------
+    #
+    # Each runs the intra-node leg on this node's subgroup (shm under
+    # HierComm) and the inter-node leg on the leaders subgroup (TCP).
+    # Sub-phases are plain collectives on subgroups: the intra group is
+    # single-node and the leaders group all-singleton, so both are flat
+    # by _hier_parts and recursion terminates after one level.  Tags
+    # thread the outer call's ``base`` through the subgroups' user-tag
+    # namespace — two outer calls never share a base, so interleaved
+    # two-level collectives cannot cross-match.
+
+    # Per-node widths where flat intra legs beat a binomial tree: every
+    # forwarded tree hop serializes a full park/wake round trip on the
+    # fabric, while a wider flat fan-in only costs the leader one more
+    # arrival-ordered ring drain (usually amortized into a single wake).
+    _INTRA_FLAT_MAX = 8
+
+    def _allreduce_hier(self, value: Any, op: Callable, base, parts) -> Any:
+        """Intra-node reduce → leader allreduce → intra-node bcast.  The
+        wire leg moves one payload per *node*; the leaders' flat
+        allreduce is bitwise identical across leaders and the closing
+        bcast copies bytes, so all ranks end bitwise identical.
+
+        At per-node widths (``<= _INTRA_FLAT_MAX``) the intra legs go
+        flat — arrival-ordered gather in, linear fan-out back — since a
+        tree's forwarding hops serialize wakeups the flat drain
+        amortizes; wider nodes keep the logarithmic depth."""
+        intra_pids, leader_pids = parts
+        intra = group_of(self.ctx, intra_pids)
+        leader = intra_pids[0]
+        flat = len(intra_pids) <= self._INTRA_FLAT_MAX
+        if flat:
+            vals = intra.gather(value, root=leader, tag=(base, "i"),
+                                algo="flat")
+            partial = None
+            if self.ctx.pid == leader:
+                for v in vals:
+                    partial = _combine(op, partial, v)
+        else:
+            partial = intra.reduce(value, op, root=leader, tag=(base, "i"))
+        if self.ctx.pid == leader:
+            partial = group_of(self.ctx, leader_pids).allreduce(
+                partial, op, tag=(base, "x"))
+        return intra.bcast(partial, root=leader, tag=(base, "b"),
+                           algo="linear" if flat else None)
+
+    def _bcast_hier(self, obj: Any, rootg: int, base, parts) -> Any:
+        """Root hands off to its node leader (if distinct), leaders
+        broadcast across nodes, every leader fans out within its node."""
+        intra_pids, leader_pids = parts
+        node_ids = self.ctx.node_ids
+        root_pid = self.ranks[rootg]
+        root_node = node_ids[root_pid]
+        root_leader = next(p for p in self.ranks
+                           if node_ids[p] == root_node)
+        me = self.ctx.pid
+        val = obj
+        if root_pid != root_leader:
+            if me == root_pid:
+                self._send(self.ranks.index(root_leader), (base, "h"), obj)
+            elif me == root_leader:
+                val = self._recv(rootg, (base, "h"))
+        if me in leader_pids:
+            val = group_of(self.ctx, leader_pids).bcast(
+                val, root=root_leader, tag=(base, "l"))
+        val = group_of(self.ctx, intra_pids).bcast(
+            val, root=intra_pids[0], tag=(base, "n"))
+        return obj if me == root_pid else val
+
+    def _barrier_hier(self, base, parts) -> None:
+        """Arrive: intra gather to the leader; leaders run the flat
+        dissemination barrier; release: intra bcast.  No rank passes the
+        leaders phase before every rank has arrived."""
+        intra_pids, leader_pids = parts
+        intra = group_of(self.ctx, intra_pids)
+        leader = intra_pids[0]
+        intra.gather(None, root=leader, tag=(base, "in"))
+        if self.ctx.pid == leader:
+            group_of(self.ctx, leader_pids).barrier(tag=(base, "x"))
+        intra.bcast(None, root=leader, tag=(base, "out"))
+
+    def _allgather_hier(self, obj: Any, base, parts) -> list:
+        """Intra gather → leaders allgather (payloads ride with their
+        outer group ranks) → leader assembles → intra bcast."""
+        intra_pids, leader_pids = parts
+        intra = group_of(self.ctx, intra_pids)
+        leader = intra_pids[0]
+        vals = intra.gather(obj, root=leader, tag=(base, "g"))
+        if self.ctx.pid == leader:
+            granks = tuple(self.ranks.index(p) for p in intra_pids)
+            out: list[Any] = [None] * self.size
+            for gr, vs in group_of(self.ctx, leader_pids).allgather(
+                    (granks, vals), tag=(base, "x")):
+                for g, v in zip(gr, vs):
+                    out[g] = v
+        else:
+            out = None
+        return intra.bcast(out, root=leader, tag=(base, "b"))
+
+    def _reduce_scatter_hier(self, arr: np.ndarray, op: Callable, base,
+                             parts) -> np.ndarray:
+        """Intra reduce of the full vector to the leader, then a leaders
+        alltoallv exchanging only each destination node's chunk slices
+        (1/P of the vector per member crosses the wire, not the whole
+        vector), leader combines per-member partials in leader order and
+        scatters each node-mate its chunk."""
+        intra_pids, leader_pids = parts
+        intra = group_of(self.ctx, intra_pids)
+        leader = intra_pids[0]
+        me = self.ctx.pid
+        flat = np.ascontiguousarray(arr).reshape(-1)
+        bounds = self._split_bounds(flat.size, self.size)
+        partial = intra.reduce(flat, op, root=leader, tag=(base, "i"))
+        if me != leader:
+            return np.asarray(
+                self._recv(self.ranks.index(leader), (base, "s")))
+        node_granks = self._node_granks()
+        sendlist = [
+            [partial[bounds[g]: bounds[g + 1]] for g in granks]
+            for granks in node_granks
+        ]
+        got = group_of(self.ctx, leader_pids).alltoallv(
+            sendlist, tag=(base, "x"))
+        mine: np.ndarray | None = None
+        for k, pid in enumerate(intra_pids):
+            acc = None
+            for per_member in got:
+                acc = _combine(op, acc, per_member[k])
+            if pid == me:
+                mine = np.asarray(acc)
+            else:
+                self._send(self.ranks.index(pid), (base, "s"), acc)
+        return mine
+
     # -- broadcast ---------------------------------------------------------
 
     def bcast(self, obj: Any = None, root: int | None = None, tag: Any = None,
@@ -367,6 +591,10 @@ class Group:
         base = self._base_tag("bc", tag)
         if algo is None and hasattr(self.ctx, "onefile_bcast"):
             algo = "onefile"
+        if algo is None:
+            parts = self._hier_parts()
+            if parts is not None:
+                return self._bcast_hier(obj, rootg, base, parts)
         if algo == "onefile":
             return self.ctx.onefile_bcast(self.ranks[rootg], obj, base, self.ranks)
         if algo == "linear":
@@ -552,6 +780,9 @@ class Group:
             return [obj]
         base = self._base_tag("ag", tag)
         if algo is None:
+            parts = self._hier_parts()
+            if parts is not None:
+                return self._allgather_hier(obj, base, parts)
             algo = select_allgather(self.size)
         if algo == "gatherbcast":
             # seed baseline: gather to group rank 0, then broadcast the
@@ -600,6 +831,10 @@ class Group:
         if self.size == 1:
             return value
         base = self._base_tag("ar", tag)
+        if algo is None:
+            parts = self._hier_parts()
+            if parts is not None:
+                return self._allreduce_hier(value, op, base, parts)
         shape = None
         staged = False
         if algo is None:
@@ -797,14 +1032,21 @@ class Group:
     # -- reduce_scatter ----------------------------------------------------
 
     def reduce_scatter(self, value: np.ndarray, op: Callable,
-                       tag: Any = None) -> np.ndarray:
+                       tag: Any = None,
+                       algo: str | None = None) -> np.ndarray:
         """Elementwise-reduce ``value`` across the group and return this
-        rank's chunk (``np.array_split`` of the flattened result)."""
+        rank's chunk (``np.array_split`` of the flattened result).
+        ``algo="ring"`` forces the flat ring; auto mode goes two-level on
+        a non-flat topology."""
         self._require_member()
         arr = np.asarray(value)
         if self.size == 1:
             return arr.reshape(-1)
         base = self._base_tag("rs", tag)
+        if algo is None:
+            parts = self._hier_parts()
+            if parts is not None:
+                return self._reduce_scatter_hier(arr, op, base, parts)
         chunks = list(np.array_split(arr.reshape(-1), self.size))
         return self._ring_reduce_scatter(chunks, op, base)[self.rank]
 
@@ -846,6 +1088,10 @@ class Group:
         if self.size == 1:
             return
         base = self._base_tag("bar", tag)
+        if algo is None:
+            parts = self._hier_parts()
+            if parts is not None:
+                return self._barrier_hier(base, parts)
         if algo == "central":
             if me == 0:
                 for src in range(1, self.size):

@@ -4,12 +4,14 @@
 MPI                     pPython
 ======================  ====================================================
 MPI_Init                ``init()`` — transport picked by
-                        ``PPYTHON_TRANSPORT=file|socket|shm|thread``:
+                        ``PPYTHON_TRANSPORT=file|socket|shm|hier|thread``:
                         ``file`` = the paper's shared-directory PythonMPI,
                         ``socket`` = TCP peer mesh bootstrapped through a
                         rendezvous (no shared filesystem), ``shm`` =
                         single-node mmap'd ring arenas (``PPYTHON_SHM_DIR``,
-                        memory-speed multi-process), ``thread`` =
+                        memory-speed multi-process), ``hier`` = composite
+                        shm-within-a-node / TCP-across-nodes with
+                        topology-aware collectives, ``thread`` =
                         in-process ranks (``run_spmd``/pRUN only)
 MPI_Comm_size / _rank   ``.np_`` / ``.pid``
 MPI_Send / MPI_Recv     ``.send`` / ``.recv`` (plus ``isend``/``irecv``/
@@ -409,6 +411,11 @@ def init(ctx: CommContext | None = None) -> CommContext:
     * ``shm`` — single-node multi-process over mmap'd ring arenas in
       ``PPYTHON_SHM_DIR`` (pRUN places it under ``/dev/shm``); falls
       back to ``<PPYTHON_COMM_DIR>/shm`` when only a comm dir is set.
+    * ``hier`` — topology-aware composite: the socket rendezvous also
+      exchanges a node fingerprint (``PPYTHON_NODE_ID`` override →
+      virtual nodes), then same-node peers talk through shm arenas and
+      cross-node peers over TCP; needs the socket rendezvous wiring
+      plus ``PPYTHON_SHM_DIR`` (or ``PPYTHON_COMM_DIR``).
     * ``thread`` — in-process ranks; only meaningful inside a process
       that hosts the whole world (``run_spmd`` / ``pRUN(...,
       transport="thread")`` install contexts directly), so ``init()``
@@ -450,6 +457,12 @@ def init(ctx: CommContext | None = None) -> CommContext:
                     pid=int(os.environ["PPYTHON_PID"]),
                     shm_dir=shm_dir,
                 )
+            elif transport == "hier":
+                from .hiercomm import HierComm
+
+                ctx = HierComm.bootstrap(
+                    np_=np_, pid=int(os.environ["PPYTHON_PID"])
+                )
             elif transport == "thread":
                 raise ValueError(
                     "PPYTHON_TRANSPORT=thread hosts all ranks inside one "
@@ -459,7 +472,7 @@ def init(ctx: CommContext | None = None) -> CommContext:
             else:
                 raise ValueError(
                     f"unknown PPYTHON_TRANSPORT {transport!r} "
-                    "(expected file|socket|shm|thread)"
+                    "(expected file|socket|shm|hier|thread)"
                 )
         else:
             ctx = LocalComm()

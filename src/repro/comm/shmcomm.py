@@ -37,7 +37,12 @@ answer to intra-node PGAS traffic:
   **doorbell** (a Unix datagram socket); a producer that publishes into
   an arena whose flag is up pokes that doorbell with one byte, so a
   parked consumer wakes with kernel precision instead of a poll
-  quantum, and an idle rank consumes no CPU.  Out-of-order tags,
+  quantum, and an idle rank consumes no CPU.  The spin window is
+  adaptive: with more local ranks than cores (``np_`` over
+  ``os.cpu_count()``), waiters park immediately — yield-spinning there
+  hands the core to other waiters instead of the producer and convoys
+  the whole world (``PPYTHON_SHM_SPIN_SECONDS`` overrides).
+  Out-of-order tags,
   outstanding irecvs, and probe all resolve against the mailbox exactly
   as on the other fabrics.
 * **Oversize payloads chunk**, at ``PPYTHON_MAX_MSG_BYTES`` exactly like
@@ -130,6 +135,22 @@ _PARK_MIN = 0.0005       # first parked wait (cross-process poll floor)
 _PARK_MAX = 0.05         # idle ceiling (same as FileMPI's poll cap)
 
 _MISSING = object()
+
+
+def _spin_window(np_: int) -> float:
+    """Seconds of ``sleep(0)`` yield-spinning before a waiter parks.
+
+    Spinning is only profitable when the waiter is not stealing the
+    producer's core.  With more local ranks than cores every yield-spin
+    timeslice goes to another waiter instead of the rank that could be
+    publishing — the convoy makes latency *worse* than a kernel wakeup —
+    so oversubscribed worlds park immediately on the doorbell (the poke
+    path is kernel-precise either way).  ``PPYTHON_SHM_SPIN_SECONDS``
+    overrides the heuristic in either direction."""
+    env = os.environ.get("PPYTHON_SHM_SPIN_SECONDS")
+    if env is not None and env != "":
+        return max(0.0, float(env))
+    return _SPIN_SECONDS if np_ <= (os.cpu_count() or 1) else 0.0
 
 
 def _doorbell_address(shm_dir: Path, pid: int):
@@ -376,6 +397,13 @@ class ShmComm(CommContext):
     the launcher).  This rank creates its ``np_ - 1`` inbound arenas at
     construction — replacing any stale files a dead run left — and
     attaches outbound arenas lazily on first send.
+
+    ``senders`` restricts which peers get inbound arenas: a composite
+    transport (HierComm) that routes only same-node traffic through
+    shared memory passes the same-node peer list so no ring is ever
+    allocated for a pair that will talk over another fabric.  Sends to
+    peers outside the restriction fail at attach time (no arena exists),
+    which is the desired loud failure for a routing bug.
     """
 
     # intra-node memory bandwidth keeps the eager tree competitive far
@@ -384,7 +412,8 @@ class ShmComm(CommContext):
     coll_eager_default = 256 * 1024
 
     def __init__(self, np_: int, pid: int, shm_dir: str | os.PathLike,
-                 arena_bytes: int | None = None, nonce: str | None = None):
+                 arena_bytes: int | None = None, nonce: str | None = None,
+                 senders=None):
         if not (0 <= pid < np_):
             raise ValueError(f"pid {pid} out of range for np={np_}")
         self.np_ = np_
@@ -401,6 +430,7 @@ class ShmComm(CommContext):
         # a single record (chunk payload + framing) must fit the ring
         # with room to pipeline: cap payloads at a quarter of capacity
         self._chunk_cap = max(2048, cap // 4)
+        self._spin = _spin_window(np_)
         # doorbell: bound BEFORE the arenas are published, so a producer
         # that attaches can always reach it
         self._door = socket.socket(socket.AF_UNIX, socket.SOCK_DGRAM)
@@ -412,15 +442,19 @@ class ShmComm(CommContext):
                 pass
         self._door.bind(addr)
         self._door.setblocking(False)
+        allowed = None if senders is None else {int(s) for s in senders}
         self._in: dict[int, _Arena] = {}
         for path in arena_paths(self.dir, np_, pid):
+            src = int(path.name.split("_")[1][1:])
+            if allowed is not None and src not in allowed:
+                continue
             try:
                 os.unlink(path)  # stale arena from a dead run: replace
             except FileNotFoundError:
                 pass
-            src = int(path.name.split("_")[1][1:])
             self._in[src] = _Arena.create(path, cap, self._nonce)
         self._out: dict[int, _Arena] = {}
+        self._door_addrs: dict[int, str] = {}
         self._send_seq: dict[tuple[int, str], int] = {}
         # next unreserved receive seq per (source, tag): blocking ``recv``
         # commits it only after the message is claimed; ``irecv`` reserves
@@ -458,8 +492,12 @@ class ShmComm(CommContext):
     def _poke(self, dest: int) -> None:
         """Ring ``dest``'s doorbell (best-effort: a full or vanished
         doorbell just means the consumer is already awake or gone)."""
+        addr = self._door_addrs.get(dest)
+        if addr is None:
+            # resolve() walks the filesystem — cache per peer, not per poke
+            addr = self._door_addrs[dest] = _doorbell_address(self.dir, dest)
         try:
-            self._door.sendto(b"!", _doorbell_address(self.dir, dest))
+            self._door.sendto(b"!", addr)
         except OSError:
             pass
 
@@ -478,7 +516,7 @@ class ShmComm(CommContext):
             )
         now = time.monotonic()
         deadline = now + recv_timeout()
-        spin_until = now + _SPIN_SECONDS
+        spin_until = now + self._spin
         while arena.free() < total:
             # keep our own inbound rings draining while we wait for the
             # consumer to make room — two ranks flooding each other can
@@ -646,7 +684,7 @@ class ShmComm(CommContext):
     def _take(self, key: tuple, tag: Any, timeout: float) -> Any:
         now = time.monotonic()
         deadline = now + timeout
-        spin_until = now + _SPIN_SECONDS
+        spin_until = now + self._spin
         pause = _PARK_MIN
         parked = False
         try:
@@ -664,7 +702,7 @@ class ShmComm(CommContext):
                 if progressed:
                     # records are landing (e.g. a chunked payload
                     # streaming in): stay hot, the producer needs us
-                    spin_until = now + _SPIN_SECONDS
+                    spin_until = now + self._spin
                     pause = _PARK_MIN
                 if now < spin_until:
                     # yield-spin: a message already in flight lands
@@ -686,11 +724,13 @@ class ShmComm(CommContext):
                     return got
                 if select.select([self._door], [], [], pause)[0]:
                     self._drain_doorbell()
-                    # woken by a publish: lower the flags and go back to
-                    # the hot spin so producers stop paying the poke
+                    # woken by a publish: lower the flags immediately so
+                    # producers stop paying a poke per record while we
+                    # drain the burst (a publish that races the next
+                    # park is caught by the set-flags-then-repoll above)
                     self._set_parked(False)
                     parked = False
-                    spin_until = time.monotonic() + _SPIN_SECONDS
+                    spin_until = time.monotonic() + self._spin
                     pause = _PARK_MIN
                 else:
                     pause = min(pause * 2, _PARK_MAX)

@@ -2,12 +2,13 @@
 
 ``run_transport_spmd(fn, np_, transport)`` mirrors
 ``threadcomm.run_spmd`` but hosts each rank's context on a thread over
-any of the four transports — ``thread`` (in-memory mailboxes), ``file``
+any of the five transports — ``thread`` (in-memory mailboxes), ``file``
 (the paper's shared-directory FileMPI), ``socket`` (the TCP peer mesh),
-``shm`` (mmap'd ring arenas) — so one parametrized test exercises every
-algorithm on every fabric without process-launch overhead.  Kept in the
-package (not ``tests/``) so the test suite and the
-collective/redistribution/pingpong benchmarks import one copy.
+``shm`` (mmap'd ring arenas), ``hier`` (the composite fabric: shm
+within a virtual node, TCP across them) — so one parametrized test
+exercises every algorithm on every fabric without process-launch
+overhead.  Kept in the package (not ``tests/``) so the test suite and
+the collective/redistribution/pingpong benchmarks import one copy.
 """
 
 from __future__ import annotations
@@ -20,6 +21,7 @@ from typing import Any, Callable
 
 from .context import CommContext, set_context
 from .filempi import FileMPI
+from .hiercomm import HierComm
 from .rendezvous import bind_listener
 from .shmcomm import ShmComm
 from .socketcomm import SocketComm
@@ -28,14 +30,16 @@ from .threadcomm import run_spmd
 __all__ = [
     "TRANSPORTS",
     "run_filempi_spmd",
+    "run_hier_spmd",
     "run_shm_spmd",
     "run_socket_spmd",
     "run_transport_spmd",
     "shm_base_dir",
+    "virtual_node_ids",
 ]
 
 # the full matrix every algorithm test should pass on
-TRANSPORTS = ("thread", "file", "socket", "shm")
+TRANSPORTS = ("thread", "file", "socket", "shm", "hier")
 
 _shm_run_counter = itertools.count()
 
@@ -157,6 +161,45 @@ def run_shm_spmd(
         )
 
 
+def virtual_node_ids(np_: int, nodes: int) -> tuple[int, ...]:
+    """Contiguous-block virtual-node assignment for ``np_`` ranks over
+    ``nodes`` nodes (clamped to ``np_`` so every node is populated) —
+    the same partition ``pRUN(transport="hier", nodes=N)`` exports."""
+    nodes = max(1, min(int(nodes), np_))
+    return tuple(r * nodes // np_ for r in range(np_))
+
+
+def run_hier_spmd(
+    fn: Callable[..., Any],
+    np_: int,
+    args: tuple = (),
+    timeout: float = 120.0,
+    nodes: int = 2,
+    node_ids=None,
+) -> list[Any]:
+    """Run ``fn(*args)`` as an SPMD body on ``np_`` HierComm thread-ranks:
+    ranks are split into ``nodes`` contiguous *virtual nodes* (default
+    2), so intra-node traffic moves through throwaway shm arenas and
+    inter-node traffic over loopback TCP — both fabrics of the composite
+    transport exercised on one machine.  Pass ``node_ids`` for an
+    explicit rank → node table."""
+    if node_ids is None:
+        node_ids = virtual_node_ids(np_, nodes)
+    if len(node_ids) != np_:
+        raise ValueError(f"node_ids covers {len(node_ids)} ranks, "
+                         f"world is {np_}")
+    listeners = [bind_listener("127.0.0.1") for _ in range(np_)]
+    endpoints = [("127.0.0.1", s.getsockname()[1]) for s in listeners]
+    nonce = f"spmd-{os.getpid()}-{next(_shm_run_counter)}"
+    with tempfile.TemporaryDirectory(
+            prefix="ppython_hier_", dir=shm_base_dir()) as d:
+        return _run_ctx_spmd(
+            lambda pid: HierComm(np_, pid, endpoints, listeners[pid],
+                                 node_ids, d, nonce=nonce),
+            fn, np_, args, timeout, "HierComm",
+        )
+
+
 def run_transport_spmd(
     fn: Callable[..., Any],
     np_: int,
@@ -167,10 +210,11 @@ def run_transport_spmd(
 ) -> list[Any]:
     """One SPMD entry point across the transport matrix.
 
-    ``transport`` is ``thread``/``file``/``socket``/``shm`` (``filempi``
-    accepted as an alias for ``file``); ``comm_dir`` is only consulted by
-    the file transport and defaults to a throwaway temp directory (shm
-    arenas live in their own throwaway directory under ``/dev/shm``)."""
+    ``transport`` is ``thread``/``file``/``socket``/``shm``/``hier``
+    (``filempi`` accepted as an alias for ``file``); ``comm_dir`` is only
+    consulted by the file transport and defaults to a throwaway temp
+    directory (shm/hier arenas live in their own throwaway directory
+    under ``/dev/shm``; ``hier`` splits ranks into 2 virtual nodes)."""
     if transport == "thread":
         return run_spmd(fn, np_, args=args, timeout=timeout)
     if transport in ("file", "filempi"):
@@ -183,6 +227,8 @@ def run_transport_spmd(
         return run_socket_spmd(fn, np_, args=args, timeout=timeout)
     if transport == "shm":
         return run_shm_spmd(fn, np_, args=args, timeout=timeout)
+    if transport == "hier":
+        return run_hier_spmd(fn, np_, args=args, timeout=timeout)
     raise ValueError(
         f"unknown transport {transport!r} (expected one of {TRANSPORTS})"
     )

@@ -18,6 +18,7 @@ from ..comm import get_context
 from ..comm.context import ctx_counter as _ctx_counter
 from .dmap import Dmap
 from .dmat import Dmat
+from .redist import _lower_dims, _strided_view, owned_indices_cached
 
 __all__ = [
     "zeros",
@@ -206,38 +207,63 @@ def agg(a, root: int | None = None):
     processor of the map).  Returns the assembled ndarray on the leader and
     ``None`` elsewhere; identity for plain ndarrays.
 
-    Only ranks holding data send (one ``isend`` each); the root completes
-    the receives in arrival order, so one slow rank never serializes the
-    assembly of the others."""
+    The root derives every sender's owned-index set locally (the shared
+    redistribution cache), lowers it to slice/segment descriptors, and
+    posts ``irecv_into`` on strided views of the output — regular blocks
+    land straight in the assembled array with no index lists on the wire
+    and no per-block temporaries; ragged (non-sliceable) owners fall back
+    to ``np.ix_`` assignment.  Only ranks holding data send (one
+    ``isend`` each); receives complete in arrival order, so one slow
+    rank never serializes the assembly of the others."""
     if not isinstance(a, Dmat):
         return a
     ctx = a.ctx
     root = a.dmap.proclist[0] if root is None else root
     me = ctx.pid
     tag = ("__pp_agg", _ctx_counter(ctx, "agg"))
-    in_map = a.dmap.inmap(me)
+
+    def owned(pid):
+        idx = owned_indices_cached(a.dmap, a.shape, pid)
+        return idx if all(len(i) for i in idx) else None
+
     if me != root:
-        if in_map:
-            # copy pins the payload: ThreadComm hands arrays by reference,
-            # and the sender may mutate its local part before the root drains
-            ctx.isend(
-                root,
-                tag,
-                ([a.owned_indices(d) for d in range(a.ndim)],
-                 a.local_view_owned().copy()),
-            )
+        if a.dmap.inmap(me) and owned(me) is not None:
+            # the copy pins the payload (ThreadComm hands arrays by
+            # reference and the sender may mutate its local part before
+            # the root drains) AND makes it contiguous, so serializing
+            # transports export the block bytes without a pack step
+            ctx.isend(root, tag, a.local_view_owned().copy())
         return None
     out = np.zeros(a.shape, dtype=a.dtype)
-    if in_map:
-        idx = [a.owned_indices(d) for d in range(a.ndim)]
-        if all(len(i) for i in idx):
-            out[np.ix_(*idx)] = a.local_view_owned()
-    senders = [p for p in a.dmap.proclist if p != root]
-    reqs = [ctx.irecv(src, tag) for src in senders]
-    for part in ctx.wait_all(reqs):
-        idx, block = part
-        if all(len(i) for i in idx):
-            out[np.ix_(*idx)] = block
+    if a.dmap.inmap(me):
+        idx = owned(me)
+        if idx is not None:
+            descs = _lower_dims(idx)
+            if descs is not None:
+                view = _strided_view(out, descs)
+                np.copyto(view, a.local_view_owned().reshape(view.shape))
+            else:
+                out[np.ix_(*idx)] = a.local_view_owned()
+    reqs = []
+    for p in a.dmap.proclist:
+        if p == root:
+            continue
+        idx = owned(p)
+        if idx is None:
+            continue  # nothing owned: that rank did not send
+        descs = _lower_dims(idx)
+        if descs is not None:
+            # regular block: land the payload bytes straight into the
+            # output's strided window (land_into reshapes by element
+            # count, so the sender's owned shape maps onto the view)
+            reqs.append((ctx.irecv_into(p, tag, _strided_view(out, descs)),
+                         None))
+        else:
+            reqs.append((ctx.irecv(p, tag), idx))
+    done = ctx.wait_all([r for r, _ in reqs])
+    for (_, idx), block in zip(reqs, done):
+        if idx is not None:
+            out[np.ix_(*idx)] = block.reshape([len(i) for i in idx])
     return out
 
 
@@ -257,15 +283,26 @@ def agg_all(a):
 
 def scatter(global_arr: np.ndarray, dmap: Dmap, dtype=None) -> Dmat:
     """Build a Dmat from a replicated global ndarray (each rank slices its
-    own part locally — no communication)."""
+    own part locally — no communication).
+
+    Regular (slice/segment) owned+halo index sets copy through a strided
+    view of the global array — one vectorized ``copyto``, no ``np.ix_``
+    index cross product or gather temporary; ragged sets keep the fancy
+    path."""
     a = Dmat(
         global_arr.shape,
         dmap,
         dtype=global_arr.dtype if dtype is None else dtype,
     )
     if a.local.size:
-        idx = [_ext_indices(a, d) for d in range(a.ndim)]
-        a.local[...] = global_arr[np.ix_(*idx)]
+        idx = tuple(_ext_indices(a, d) for d in range(a.ndim))
+        src = np.asarray(global_arr)
+        descs = _lower_dims(idx) if src.flags["C_CONTIGUOUS"] else None
+        if descs is not None:
+            view = _strided_view(src, descs)
+            np.copyto(a.local.reshape(view.shape), view, casting="unsafe")
+        else:
+            a.local[...] = global_arr[np.ix_(*idx)]
     return a
 
 

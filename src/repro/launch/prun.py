@@ -6,14 +6,16 @@ transport through environment variables::
 
     PPYTHON_NP         world size
     PPYTHON_PID        this instance's rank
-    PPYTHON_TRANSPORT  file | socket | shm | thread
+    PPYTHON_TRANSPORT  file | socket | shm | hier | thread
     PPYTHON_COMM_DIR   shared directory (file transport; scratch for
                        result files otherwise)
-    PPYTHON_RDZV_ADDR  rank-0 TCP rendezvous (socket transport)
-    PPYTHON_SHM_DIR    arena directory (shm transport; pRUN puts it
-                       under /dev/shm when the node has it)
+    PPYTHON_RDZV_ADDR  rank-0 TCP rendezvous (socket/hier transports)
+    PPYTHON_SHM_DIR    arena directory (shm/hier transports; pRUN puts
+                       it under /dev/shm when the node has it)
     PPYTHON_SHM_NONCE  per-launch nonce stamped into every arena header
-                       (shm transport; makes stale-directory reuse inert)
+                       (shm/hier; makes stale-directory reuse inert)
+    PPYTHON_NODE_ID    virtual-node fingerprint override (hier transport;
+                       ``pRUN(..., nodes=N)`` assigns contiguous blocks)
 
 ``target`` is either a script path (launched as ``python script.py``) or a
 ``"module:function"`` string (launched through ``prun_worker``).  Rank
@@ -27,9 +29,15 @@ directory on any message path; ``shm`` moves messages through mmap'd
 ring arenas in a launcher-owned directory under ``/dev/shm`` — the
 memory-speed single-node path — and the launcher removes that directory
 **unconditionally** (crash included: shared-memory files are RAM, a
-leak outlives the workers); ``thread`` hosts every rank on a thread of
-*this* process (module:function targets only) — the fastest way to run
-an SPMD body with zero launch overhead.
+leak outlives the workers); ``hier`` composes both — the socket
+rendezvous exchanges endpoints *and* node fingerprints, same-node peers
+then talk through shm arenas and cross-node peers over TCP
+(``nodes=N`` partitions a single machine into N virtual nodes for
+tests/benchmarks), and the arena directory keeps the unconditional
+shm cleanup even when only the TCP half of the bootstrap fails;
+``thread`` hosts every rank on a thread of *this* process
+(module:function targets only) — the fastest way to run an SPMD body
+with zero launch overhead.
 
 Fault handling beyond the paper: a per-rank supervisor notices dead
 processes (nonzero exit) and, when ``restarts > 0``, relaunches the rank
@@ -124,24 +132,33 @@ def pRUN(
     restarts: int = 0,
     env: dict[str, str] | None = None,
     collect_results: bool = True,
+    nodes: int | None = None,
 ) -> list[Any]:
     """Launch ``np_`` SPMD instances of ``target``; return per-rank results.
 
-    ``transport`` is ``file``/``socket``/``shm``/``thread`` (default:
-    the ``PPYTHON_TRANSPORT`` environment, else ``file``).  Results are
-    only collected for ``module:function`` targets (scripts run for side
-    effects, matching the paper's usage).
+    ``transport`` is ``file``/``socket``/``shm``/``hier``/``thread``
+    (default: the ``PPYTHON_TRANSPORT`` environment, else ``file``).
+    ``nodes`` (hier only) partitions the ranks into that many contiguous
+    virtual nodes via per-rank ``PPYTHON_NODE_ID`` — omitted, ranks
+    fingerprint by hostname, so a single-machine hier run is one node.
+    Results are only collected for ``module:function`` targets (scripts
+    run for side effects, matching the paper's usage).
     """
     transport = (transport or os.environ.get("PPYTHON_TRANSPORT")
                  or "file").lower()
-    if transport not in ("file", "socket", "shm", "thread"):
+    if transport not in ("file", "socket", "shm", "hier", "thread"):
         raise ValueError(
             f"unknown transport {transport!r} "
-            "(expected file|socket|shm|thread)"
+            "(expected file|socket|shm|hier|thread)"
+        )
+    if nodes is not None and transport != "hier":
+        raise ValueError(
+            f"nodes= partitions virtual nodes for transport='hier' only "
+            f"(got transport={transport!r})"
         )
     if transport == "thread":
         return _run_threaded(target, np_, args, timeout, env)
-    if transport == "socket" and restarts > 0:
+    if transport in ("socket", "hier") and restarts > 0:
         raise ValueError(
             "pRUN restarts need the file transport for now: a restarted "
             "rank cannot re-join a completed socket rendezvous (peers hold "
@@ -170,7 +187,14 @@ def pRUN(
     base_env["PPYTHON_COMM_DIR"] = str(comm_dir)
     rdzv_srv = None
     shm_dir: Path | None = None
-    if transport == "shm":
+    if transport == "hier":
+        # a rank's node id must come from THIS launch (nodes= below) or
+        # the hostname fingerprint — an os.environ-inherited id (e.g. a
+        # hier worker launching a nested pRUN) would collapse the nested
+        # world onto one rank's virtual node
+        if not (env and "PPYTHON_NODE_ID" in env):
+            base_env.pop("PPYTHON_NODE_ID", None)
+    if transport in ("shm", "hier"):
         # arenas live in a launcher-owned directory under /dev/shm when
         # the node has it (pages never see a writeback path); a fresh
         # per-launch nonce is stamped into every arena header so workers
@@ -189,16 +213,20 @@ def pRUN(
             base_env["PPYTHON_SHM_DIR"] = str(shm_dir)
         if "PPYTHON_SHM_NONCE" not in explicit:
             base_env["PPYTHON_SHM_NONCE"] = uuid.uuid4().hex
-    if transport == "socket" and "PPYTHON_RDZV_ADDR" not in base_env:
+    if (transport in ("socket", "hier")
+            and "PPYTHON_RDZV_ADDR" not in base_env):
         # single-node launch: the launcher itself serves the rendezvous
         # over loopback, so the comm dir never appears on a message path
         # (multi-node jobs point PPYTHON_RDZV_ADDR at a reachable host
-        # instead — see slurm.py, where rank 0 serves)
+        # instead — see slurm.py, where rank 0 serves).  For hier this
+        # runs AFTER the shm block, so the finally's unconditional
+        # arena-dir rmtree covers a rendezvous/bootstrap failure too —
+        # the TCP half failing can never leak /dev/shm arenas.
         addr, rdzv_srv = _serve_rendezvous(np_, timeout)
         base_env["PPYTHON_RDZV_ADDR"] = addr
         base_env["PPYTHON_RDZV_EXTERNAL"] = "1"
         base_env.setdefault("PPYTHON_HOST", "127.0.0.1")
-    elif transport == "socket":
+    elif transport in ("socket", "hier"):
         # caller brought their own rendezvous address: rank 0 serves it,
         # so a stale EXTERNAL flag (e.g. inherited from an enclosing
         # launcher) must not leave the job serverless
@@ -216,6 +244,10 @@ def pRUN(
     def launch(pid: int) -> None:
         e = dict(base_env)
         e["PPYTHON_PID"] = str(pid)
+        if transport == "hier" and nodes is not None:
+            # contiguous virtual-node blocks, matching
+            # repro.comm.testing.virtual_node_ids
+            e["PPYTHON_NODE_ID"] = str(pid * max(1, min(nodes, np_)) // np_)
         procs[pid] = subprocess.Popen(cmd, env=e)
 
     deadline = time.monotonic() + timeout

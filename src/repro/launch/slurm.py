@@ -3,10 +3,13 @@
 pPython submits SPMD jobs through the cluster scheduler instead of
 launching local processes.  ``slurm_script`` renders an ``sbatch`` file in
 which every Slurm task runs one pPython instance — wired either to the
-shared comm directory (``transport="file"``, the paper's messaging) or to
+shared comm directory (``transport="file"``, the paper's messaging), to
 the TCP peer mesh via a rank-0 rendezvous (``transport="socket"``, no
-shared filesystem required); ``submit`` shells out to ``sbatch`` when
-present.
+shared filesystem required), or to the topology-aware composite
+(``transport="hier"``: the same rendezvous also carries each rank's
+``SLURM_NODEID`` fingerprint, ranks sharing a node then message through
+``/dev/shm`` arenas and only cross-node pairs touch the interconnect);
+``submit`` shells out to ``sbatch`` when present.
 
 A TPU-pod variant is included: on TPU the "scheduler" launches one process
 per host and initializes ``jax.distributed`` so all hosts join one JAX
@@ -45,10 +48,16 @@ def slurm_script(
     shared filesystem at all**: the script derives the rendezvous address
     from the job's first node, every task exchanges its TCP endpoint
     through rank 0, and messages flow over the peer mesh.
+    ``transport="hier"`` bootstraps like socket but each task also
+    publishes its ``SLURM_NODEID`` as the node fingerprint: same-node
+    ranks message through node-local ``/dev/shm`` arenas (reclaimed per
+    node after the run), cross-node ranks over TCP, and the collectives
+    go two-level automatically.
     """
-    if transport not in ("file", "socket"):
+    if transport not in ("file", "socket", "hier"):
         raise ValueError(
-            f"slurm_script transport must be file|socket, got {transport!r}"
+            f"slurm_script transport must be file|socket|hier, "
+            f"got {transport!r}"
         )
     if transport == "file" and not comm_dir:
         raise ValueError("file transport needs comm_dir on a shared filesystem")
@@ -83,20 +92,38 @@ def slurm_script(
         ]
         if comm_dir:
             lines.append(f"export PPYTHON_COMM_DIR={comm_dir}  # results only")
+        if transport == "hier":
+            lines += [
+                "# hier: same-node ranks message through node-local shm",
+                "# arenas; SLURM_NODEID rides the rendezvous as the node",
+                "# fingerprint so every rank derives the same topology",
+                'export PPYTHON_SHM_DIR="/dev/shm/ppython_${SLURM_JOB_ID}"',
+                'export PPYTHON_SHM_NONCE="job-${SLURM_JOB_ID}"',
+            ]
+    per_task_env = "PPYTHON_PID=\\$SLURM_PROCID "
+    if transport == "hier":
+        per_task_env += "PPYTHON_NODE_ID=\\$SLURM_NODEID "
     lines += [
         "export OMP_NUM_THREADS=1  # avoid BLAS oversubscription (paper §III.F.4)",
         "export OPENBLAS_NUM_THREADS=1",
         "export MKL_NUM_THREADS=1",
         "",
-        'srun bash -c "PPYTHON_PID=\\$SLURM_PROCID '
+        f'srun bash -c "{per_task_env}'
         + (
             f"{python} -m repro.launch.prun {target}"
             if ":" in target and not os.path.exists(target)
             else f"{python} {target}"
         )
         + '"',
-        "",
     ]
+    if transport == "hier":
+        lines += [
+            "# reclaim the node-local arena directories (shared memory is",
+            "# RAM — a leak would outlive the job)",
+            'srun --ntasks="$SLURM_JOB_NUM_NODES" --ntasks-per-node=1 '
+            'rm -rf "$PPYTHON_SHM_DIR"',
+        ]
+    lines.append("")
     return "\n".join(lines)
 
 

@@ -18,6 +18,7 @@ import pytest
 from repro.comm import (
     CommContext,
     FileMPI,
+    HierComm,
     ShmComm,
     SocketComm,
     StragglerTimeout,
@@ -47,6 +48,17 @@ def ctxpair(request, tmp_path):
     elif request.param == "shm":
         pair = tuple(
             ShmComm(2, pid, tmp_path / "shm", nonce="ctxpair")
+            for pid in range(2)
+        )
+    elif request.param == "hier":
+        # both ranks on one virtual node: the composite delegates the
+        # whole contract to its shm fabric (the TCP leg is covered by the
+        # socket cell and the multi-node collectives/redist matrices)
+        listeners = [bind_listener("127.0.0.1") for _ in range(2)]
+        eps = [("127.0.0.1", s.getsockname()[1]) for s in listeners]
+        pair = tuple(
+            HierComm(2, pid, eps, listeners[pid], (0, 0),
+                     tmp_path / "hier", nonce="ctxpair")
             for pid in range(2)
         )
     else:

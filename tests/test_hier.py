@@ -1,0 +1,456 @@
+"""HierComm: the topology-aware composite fabric, beyond the generic matrix.
+
+The collectives/redistribution/async suites already run on ``hier``
+through ``TRANSPORTS``; this file covers what only this transport has:
+the routing property itself (every intra-node message counted against
+the shm fabric, every inter-node message against tcp — exact per-fabric
+send counts), node-fingerprint bootstrap (``PPYTHON_NODE_ID`` virtual
+nodes, dense id mapping), the ``init()``/pRUN/Slurm launch wiring with
+arena-directory hygiene, and ``Group.split``/two-level collective
+equivalence across the transport matrix.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.comm import get_context, world_group
+from repro.comm.hiercomm import HierComm, node_label
+from repro.comm.rendezvous import bind_listener
+from repro.comm.testing import (
+    TRANSPORTS,
+    run_hier_spmd,
+    run_transport_spmd,
+    virtual_node_ids,
+)
+
+# ---------------------------------------------------------------------------
+# units: node fingerprints and virtual-node partitions
+# ---------------------------------------------------------------------------
+
+
+class TestNodeLabel:
+    def test_env_override_wins(self, monkeypatch):
+        monkeypatch.setenv("PPYTHON_NODE_ID", "3")
+        assert node_label() == "vnode:3"
+
+    def test_explicit_override_beats_env(self, monkeypatch):
+        monkeypatch.setenv("PPYTHON_NODE_ID", "3")
+        assert node_label("7") == "vnode:7"
+
+    def test_hostname_fallback(self, monkeypatch):
+        monkeypatch.delenv("PPYTHON_NODE_ID", raising=False)
+        import socket
+
+        assert node_label() == f"host:{socket.gethostname()}"
+
+    def test_empty_env_means_no_override(self, monkeypatch):
+        monkeypatch.setenv("PPYTHON_NODE_ID", "")
+        assert node_label().startswith("host:")
+
+    def test_namespaces_disjoint(self, monkeypatch):
+        """A virtual node named like a hostname must not collide with
+        the physical fingerprint of that host."""
+        import socket
+
+        host = socket.gethostname()
+        assert node_label(host) != node_label(None) or \
+            node_label(host).startswith("vnode:")
+
+
+class TestVirtualNodeIds:
+    def test_contiguous_blocks(self):
+        assert virtual_node_ids(8, 2) == (0, 0, 0, 0, 1, 1, 1, 1)
+        assert virtual_node_ids(6, 3) == (0, 0, 1, 1, 2, 2)
+
+    def test_uneven_split_still_covers_every_node(self):
+        ids = virtual_node_ids(5, 2)
+        assert ids == (0, 0, 0, 1, 1)
+        assert set(ids) == {0, 1}
+
+    def test_nodes_clamped_to_world(self):
+        # more nodes than ranks: every rank its own node
+        assert virtual_node_ids(3, 8) == (0, 1, 2)
+        # degenerate requests collapse to one node
+        assert virtual_node_ids(4, 0) == (0, 0, 0, 0)
+        assert virtual_node_ids(4, -2) == (0, 0, 0, 0)
+
+
+# ---------------------------------------------------------------------------
+# the routing property: shm within a node, tcp across, nothing else
+# ---------------------------------------------------------------------------
+
+
+def _routing_body():
+    ctx = get_context()
+    me, np_ = ctx.pid, ctx.np_
+    before = dict(ctx.fabric_sends)
+    for peer in range(np_):
+        if peer != me:
+            ctx.send(peer, ("r", me), me * 100)
+    got = sorted(ctx.recv(p, ("r", p)) for p in range(np_) if p != me)
+    assert got == [p * 100 for p in range(np_) if p != me]
+    shm_n = ctx.fabric_sends["shm"] - before["shm"]
+    tcp_n = ctx.fabric_sends["tcp"] - before["tcp"]
+    oracle = {p: ctx.fabric_of(p) for p in range(np_) if p != me}
+    return {
+        "shm": shm_n,
+        "tcp": tcp_n,
+        "node_id": ctx.node_id,
+        "node_ids": ctx.node_ids,
+        "node_peers": ctx.node_peers,
+        "oracle": oracle,
+    }
+
+
+class TestRouting:
+    def test_all_pairs_exact_fabric_counts(self):
+        """With 2 virtual nodes every intra-node message traverses the
+        shm arenas and every inter-node message TCP — asserted via the
+        per-fabric exec counters, exactly, per rank."""
+        np_ = 4
+        res = run_hier_spmd(_routing_body, np_, nodes=2)
+        ids = virtual_node_ids(np_, 2)
+        for me, r in enumerate(res):
+            assert r["node_ids"] == ids
+            assert r["node_id"] == ids[me]
+            assert r["node_peers"] == tuple(
+                p for p in range(np_) if ids[p] == ids[me])
+            intra = len(r["node_peers"]) - 1
+            assert r["shm"] == intra
+            assert r["tcp"] == (np_ - 1) - intra
+            for p, fab in r["oracle"].items():
+                assert fab == ("shm" if ids[p] == ids[me] else "tcp")
+
+    def test_all_singleton_nodes_route_everything_over_tcp(self):
+        res = run_hier_spmd(_routing_body, 3, node_ids=(0, 1, 2))
+        for r in res:
+            assert r["shm"] == 0
+            assert r["tcp"] == 2
+
+    def test_fabric_of_rejects_out_of_range(self):
+        res = run_hier_spmd(_fabric_of_range_body, 2, nodes=1)
+        assert res == [True, True]
+
+
+def _fabric_of_range_body():
+    ctx = get_context()
+    with pytest.raises(ValueError, match="out of range"):
+        ctx.fabric_of(ctx.np_)
+    with pytest.raises(ValueError, match="out of range"):
+        ctx.fabric_of(-1)
+    return True
+
+
+class TestConstructorValidation:
+    def test_pid_out_of_range(self, tmp_path):
+        lst = bind_listener("127.0.0.1")
+        try:
+            with pytest.raises(ValueError, match="out of range"):
+                HierComm(2, 5, [("h", 1), ("h", 2)], lst, (0, 0), tmp_path)
+        finally:
+            lst.close()
+
+    def test_node_ids_must_cover_world(self, tmp_path):
+        lst = bind_listener("127.0.0.1")
+        try:
+            with pytest.raises(ValueError, match="covers"):
+                HierComm(2, 0, [("h", 1), ("h", 2)], lst, (0,), tmp_path)
+        finally:
+            lst.close()
+
+
+# ---------------------------------------------------------------------------
+# bootstrap: the rendezvous carries the fingerprint, init() wires it
+# ---------------------------------------------------------------------------
+
+
+class TestBootstrap:
+    def test_single_rank_bootstrap(self, tmp_path, monkeypatch):
+        """np=1 exercises the full bootstrap mechanics in-process: the
+        richer (host, port, label) record through the file rendezvous,
+        dense node mapping, and the shm self-send path."""
+        monkeypatch.setenv("PPYTHON_HOST", "127.0.0.1")
+        monkeypatch.setenv("PPYTHON_NODE_ID", "solo")
+        ctx = HierComm.bootstrap(1, 0, rdzv_dir=tmp_path,
+                                 shm_dir=tmp_path / "shm", nonce="boot1")
+        try:
+            assert ctx.node_ids == (0,)
+            assert ctx.fabric_of(0) == "shm"
+            ctx.send(0, "self", np.arange(4))
+            assert ctx.recv(0, "self").sum() == 6
+        finally:
+            ctx.finalize()
+
+    def test_bootstrap_requires_some_shm_dir(self, tmp_path, monkeypatch):
+        monkeypatch.delenv("PPYTHON_SHM_DIR", raising=False)
+        monkeypatch.delenv("PPYTHON_COMM_DIR", raising=False)
+        monkeypatch.setenv("PPYTHON_HOST", "127.0.0.1")
+        with pytest.raises(ValueError, match="PPYTHON_SHM_DIR"):
+            HierComm.bootstrap(1, 0, rdzv_dir=tmp_path)
+
+    @pytest.mark.parametrize(
+        "labels,want_ids,want_fabric",
+        [(("a", "a"), (0, 0), "shm"), (("zebra", "apple"), (0, 1), "tcp")],
+        ids=["same-node", "cross-node"],
+    )
+    def test_init_selects_hier_transport(self, tmp_path, labels, want_ids,
+                                         want_fabric):
+        """Real processes through init(): PPYTHON_TRANSPORT=hier plus the
+        rendezvous and shm dirs is all the env wiring a rank needs, and
+        the per-rank PPYTHON_NODE_ID decides which fabric a pair rides.
+        Node fingerprints map to dense ids in rank order."""
+        code = (
+            "import sys\n"
+            "from repro.comm import init\n"
+            "ctx = init()\n"
+            "assert type(ctx).__name__ == 'HierComm', type(ctx)\n"
+            f"assert ctx.node_ids == {want_ids!r}, ctx.node_ids\n"
+            f"assert ctx.fabric_of(1 - ctx.pid) == {want_fabric!r}\n"
+            "if ctx.pid == 0:\n"
+            "    ctx.send(1, 'x', list(range(8)))\n"
+            "else:\n"
+            "    s = sum(ctx.recv(0, 'x', timeout=30))\n"
+            f"    n = ctx.fabric_sends[{want_fabric!r}]\n"
+            "    open(sys.argv[1], 'w').write(f'{s} {n}')\n"
+            "ctx.finalize()\n"
+        )
+        out = tmp_path / "result.txt"
+        env = dict(
+            os.environ,
+            PPYTHON_TRANSPORT="hier",
+            PPYTHON_NP="2",
+            PPYTHON_HOST="127.0.0.1",
+            PPYTHON_RDZV_DIR=str(tmp_path / "rdzv"),
+            PPYTHON_SHM_DIR=str(tmp_path / "shm"),
+            PPYTHON_SHM_NONCE="hier-init-test",
+        )
+        env.pop("PPYTHON_RDZV_ADDR", None)
+        procs = [
+            subprocess.Popen(
+                [sys.executable, "-c", code, str(out)],
+                env=dict(env, PPYTHON_PID=str(pid),
+                         PPYTHON_NODE_ID=labels[pid]),
+            )
+            for pid in range(2)
+        ]
+        assert [p.wait(timeout=60) for p in procs] == [0, 0]
+        # rank 1 received the payload; its receives never post a send,
+        # so the only counted message on the pair's fabric is rank 0's
+        assert out.read_text() == "28 0"
+        assert list((tmp_path / "shm").glob("arena_*.ring")) == []
+
+
+# ---------------------------------------------------------------------------
+# launchers: pRUN virtual nodes + arena hygiene, the Slurm template
+# ---------------------------------------------------------------------------
+
+
+def _shm_dirs() -> set:
+    base = Path("/dev/shm")
+    if not base.is_dir():
+        return set()
+    return {p.name for p in base.glob("ppython_shm_*")}
+
+
+@pytest.mark.slow
+class TestPRunHier:
+    def test_hier_processes_end_to_end(self):
+        from repro.launch import pRUN
+
+        before = _shm_dirs()
+        res = pRUN("repro.launch._selftest:pingpong", 2, transport="hier",
+                   nodes=2, timeout=120.0)
+        assert res[0] == float((np.arange(1000.0) * 2).sum())
+        assert _shm_dirs() == before  # arena dir reclaimed on clean exit
+
+    def test_crash_still_reclaims_arena_dir(self):
+        """Worker death must not leak shared memory even when only the
+        TCP half of the composite got far enough to matter."""
+        from repro.launch import pRUN
+
+        before = _shm_dirs()
+        with pytest.raises(RuntimeError, match="exited with code 3"):
+            pRUN("repro.launch._selftest:crash_on_rank1", 2,
+                 transport="hier", nodes=2, timeout=120.0)
+        assert _shm_dirs() == before
+
+    def test_nodes_kwarg_is_hier_only(self):
+        from repro.launch import pRUN
+
+        with pytest.raises(ValueError, match="hier"):
+            pRUN("repro.launch._selftest:pingpong", 2, transport="socket",
+                 nodes=2)
+
+    def test_hier_rejects_restarts(self):
+        from repro.launch import pRUN
+
+        with pytest.raises(ValueError, match="restart"):
+            pRUN("repro.launch._selftest:pingpong", 2, transport="hier",
+                 restarts=1)
+
+
+class TestSlurmTemplate:
+    def test_hier_script_wires_topology_env(self):
+        from repro.launch.slurm import slurm_script
+
+        script = slurm_script("train.py", 16, transport="hier", nodes=4)
+        # every task fingerprints by its Slurm node id
+        assert "PPYTHON_NODE_ID=\\$SLURM_NODEID" in script
+        # node-local arenas under /dev/shm, job-scoped dir and nonce
+        assert 'PPYTHON_SHM_DIR="/dev/shm/ppython_${SLURM_JOB_ID}"' in script
+        assert 'PPYTHON_SHM_NONCE="job-${SLURM_JOB_ID}"' in script
+        # the rendezvous bootstrap rides the socket wiring
+        assert "PPYTHON_RDZV_ADDR" in script
+        # and the arena dirs are reclaimed on every node afterwards
+        assert 'rm -rf "$PPYTHON_SHM_DIR"' in script
+        assert '--ntasks-per-node=1' in script
+
+    def test_socket_script_has_no_topology_env(self):
+        from repro.launch.slurm import slurm_script
+
+        script = slurm_script("train.py", 16, transport="socket")
+        assert "PPYTHON_NODE_ID" not in script
+        assert "PPYTHON_SHM_DIR" not in script
+
+
+# ---------------------------------------------------------------------------
+# Group.split and two-level collective equivalence (transport matrix)
+# ---------------------------------------------------------------------------
+
+
+def _split_noncontiguous_body():
+    ctx = get_context()
+    g = world_group(ctx)
+    sub = g.split(ctx.pid % 2)  # even ranks vs odd ranks: non-contiguous
+    assert sub.ranks == tuple(
+        p for p in range(ctx.np_) if p % 2 == ctx.pid % 2)
+    x = np.arange(256, dtype=np.int64) * (ctx.pid + 1)
+    got = sub.allreduce(x, np.add)
+    want = sum(np.arange(256, dtype=np.int64) * (p + 1)
+               for p in sub.ranks)
+    assert got.tobytes() == want.tobytes()
+    return sub.rank
+
+
+def _split_permuted_keys_body():
+    ctx = get_context()
+    g = world_group(ctx)
+    sub = g.split(0, key=ctx.np_ - ctx.pid)  # one color, reversed order
+    assert sub.ranks == tuple(reversed(range(ctx.np_)))
+    assert sub.rank == ctx.np_ - 1 - ctx.pid
+    # bcast from the new group's rank 0 (= highest pid; root is a pid)
+    got = sub.bcast("payload" if sub.rank == 0 else None,
+                    root=ctx.np_ - 1)
+    assert got == "payload"
+    return sub.rank
+
+
+def _split_none_opts_out_body():
+    ctx = get_context()
+    g = world_group(ctx)
+    sub = g.split(None if ctx.pid == 0 else "rest")
+    if ctx.pid == 0:
+        assert sub is None
+        return None
+    assert sub.ranks == tuple(range(1, ctx.np_))
+    return sub.allreduce(1, np.add)
+
+
+def _two_level_vs_flat_body():
+    """Auto allreduce (two-level on hier) must be bitwise identical to
+    the forced flat ring; int64 keeps the reduction exact, so the oracle
+    holds regardless of combine association."""
+    ctx = get_context()
+    g = world_group(ctx)
+    x = (np.arange(1024, dtype=np.int64) - 37) * (ctx.pid + 3)
+    auto = g.allreduce(x, np.add)
+    flat = g.allreduce(x, np.add, algo="ring")
+    assert auto.tobytes() == flat.tobytes()
+    want = sum((np.arange(1024, dtype=np.int64) - 37) * (p + 3)
+               for p in range(ctx.np_))
+    assert auto.tobytes() == want.tobytes()
+    return True
+
+
+class TestSplitMatrix:
+    @pytest.mark.parametrize("transport", TRANSPORTS)
+    def test_noncontiguous_colors(self, transport):
+        ranks = run_transport_spmd(_split_noncontiguous_body, 4, transport)
+        assert ranks == [0, 0, 1, 1]
+
+    @pytest.mark.parametrize("transport", TRANSPORTS)
+    def test_permuted_keys(self, transport):
+        ranks = run_transport_spmd(_split_permuted_keys_body, 4, transport)
+        assert ranks == [3, 2, 1, 0]
+
+    def test_color_none_opts_out(self):
+        res = run_transport_spmd(_split_none_opts_out_body, 4, "thread")
+        assert res == [None, 3, 3, 3]
+
+    @pytest.mark.parametrize("transport", TRANSPORTS)
+    def test_two_level_vs_flat_allreduce_bitwise(self, transport):
+        assert run_transport_spmd(
+            _two_level_vs_flat_body, 4, transport) == [True] * 4
+
+    def test_split_spanning_nodes_goes_two_level(self):
+        """A non-contiguous split on hier (even/odd ranks over 2 virtual
+        nodes) spans both nodes with 2 members each, so its collectives
+        re-derive a two-level topology for the subgroup — and stay
+        exact.  (np=4 would leave every node a singleton, which is
+        deliberately flat.)"""
+        res = run_hier_spmd(_split_spans_nodes_body, 8, nodes=2)
+        assert all(res)
+
+
+def _split_spans_nodes_body():
+    ctx = get_context()
+    g = world_group(ctx)
+    sub = g.split(ctx.pid % 2)
+    # {0,2,4,6} and {1,3,5,7} each put 2 members on each of the vnodes
+    # (0,0,0,0,1,1,1,1): two-level engages on the subgroup
+    parts = sub._hier_parts()
+    assert parts is not None, "subgroup should see a non-flat topology"
+    leader_pids = parts[1]
+    assert len(leader_pids) == 2
+    before = dict(ctx.fabric_sends)
+    x = np.arange(64, dtype=np.int64) * (ctx.pid + 1)
+    got = sub.allreduce(x, np.add)
+    want = sum(np.arange(64, dtype=np.int64) * (p + 1) for p in sub.ranks)
+    assert got.tobytes() == want.tobytes()
+    # the inter-node leg really crossed the wire
+    sent_tcp = ctx.fabric_sends["tcp"] - before["tcp"]
+    assert sent_tcp > 0 if ctx.pid in leader_pids else sent_tcp == 0
+    return True
+
+
+def _split_by_node_body():
+    ctx = get_context()
+    g = world_group(ctx)
+    sub = g.split_by_node()
+    assert sub.ranks == ctx.node_peers
+    # no communication needed: group_of memoizes per coloring
+    assert sub is g.split_by_node()
+    return sub.allreduce(ctx.pid, np.add)
+
+
+class TestSplitByNode:
+    def test_matches_node_peers(self):
+        res = run_hier_spmd(_split_by_node_body, 4, nodes=2)
+        assert res == [1, 1, 5, 5]  # 0+1 and 2+3
+
+    def test_flat_context_returns_whole_group(self):
+        res = run_transport_spmd(_split_by_node_body_flat, 3, "thread")
+        assert res == [3, 3, 3]
+
+
+def _split_by_node_body_flat():
+    ctx = get_context()
+    g = world_group(ctx)
+    sub = g.split_by_node()
+    assert sub is g
+    return sub.allreduce(1, np.add)
