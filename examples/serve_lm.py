@@ -1,7 +1,9 @@
-"""Batched serving example: decode a small model with batched requests.
+"""Continuous-batching serving example.
 
-Loads (or random-initializes) a reduced-config model, runs the ServeEngine
-over a batch of prompts with greedy decoding, and reports tokens/s.
+Loads (or random-initializes) a reduced-config model, submits a small
+mixed-length request stream to the ``ContinuousBatchingEngine`` — two
+requests up front, two more arriving mid-decode, exercising slot admit /
+retire — and prints the generated tokens plus ``serve_stats()``.
 
     PYTHONPATH=src python examples/serve_lm.py --arch gemma-2b --max-new 24
 """
@@ -17,7 +19,7 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import get_config, list_archs  # noqa: E402
 from repro.models import init_params  # noqa: E402
-from repro.serve import ServeEngine  # noqa: E402
+from repro.serve import ContinuousBatchingEngine  # noqa: E402
 
 
 def main() -> None:
@@ -25,27 +27,45 @@ def main() -> None:
     ap.add_argument("--arch", choices=list_archs(), default="gemma-2b")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--slots", type=int, default=2)
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
     params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
-    engine = ServeEngine(cfg, params, max_seq=128)
+    engine = ContinuousBatchingEngine(
+        cfg, params, slots=args.slots, max_seq=128, prefill_pad=16,
+        state_dtype=jnp.float32,
+    )
 
-    prompts = [
-        [1, 5, 9, 13],
-        [2, 4, 8],
-        [3, 7, 11, 19, 23],
-        [10],
+    early = [[1, 5, 9, 13], [2, 4, 8]]
+    late = [[3, 7, 11, 19, 23], [10]]
+    reqs = [
+        engine.submit(p, max_new=args.max_new,
+                      temperature=args.temperature, seed=i)
+        for i, p in enumerate(early)
     ]
     t0 = time.perf_counter()
-    out = engine.generate(prompts, max_new=args.max_new,
-                          temperature=args.temperature)
+    steps = 0
+    while not engine.sched.idle:
+        engine.step()
+        steps += 1
+        if steps == 3 and late:  # two more requests arrive mid-decode
+            reqs += [
+                engine.submit(p, max_new=args.max_new,
+                              temperature=args.temperature, seed=len(early) + i)
+                for i, p in enumerate(late)
+            ]
+            late = []
     dt = time.perf_counter() - t0
-    new_tokens = args.max_new * len(prompts)
-    for i, seq in enumerate(out):
-        print(f"request {i}: prompt {prompts[i]} -> {seq[len(prompts[i]):]}")
-    print(f"{new_tokens} tokens in {dt:.2f}s = {new_tokens/dt:.1f} tok/s "
-          f"(batched, {cfg.name})")
+
+    for r in reqs:
+        print(f"request {r.rid}: prompt {r.prompt} -> {r.tokens}")
+    stats = engine.serve_stats()
+    total = stats["tokens_generated"]
+    print(f"{total} tokens in {dt:.2f}s = {total / dt:.1f} tok/s "
+          f"({args.slots} slots, {cfg.name})")
+    print("serve_stats:", {k: (round(v, 3) if isinstance(v, float) else v)
+                           for k, v in stats.items()})
 
 
 if __name__ == "__main__":

@@ -38,6 +38,7 @@ __all__ = [
     "batch_shardings",
     "logits_sharding",
     "decode_state_shardings",
+    "serve_carry_shardings",
 ]
 
 
@@ -190,3 +191,25 @@ def decode_state_shardings(cfg: ModelConfig, mesh: Mesh, batch: int,
         return NamedSharding(mesh, P())
 
     return jax.tree.map(leaf, abstract_decode_state(cfg, batch, max_seq))
+
+
+def serve_carry_shardings(cfg: ModelConfig, mesh: Mesh, slots: int,
+                          max_seq: int) -> dict:
+    """Placement tree for the continuous-batching engine's carry: the
+    decode state shards its per-request batch axis over the data axes
+    (``decode_state_shardings``) and every per-slot control vector
+    (tokens/pos/active/gen/budget/temp/key/eos) shards its leading slot
+    axis the same way, so the jitted admit/decode steps run unmodified on
+    a multi-device host mesh."""
+    vec = NamedSharding(mesh, _dp_spec(mesh, slots))
+    return {
+        "state": decode_state_shardings(cfg, mesh, slots, max_seq),
+        "tokens": vec,
+        "pos": vec,
+        "active": vec,
+        "gen": vec,
+        "budget": vec,
+        "temp": vec,
+        "key": vec,
+        "eos": vec,
+    }

@@ -145,6 +145,42 @@ def attention(cfg: ModelConfig, p, x, positions, mask=None):
     return out @ p["wo"]
 
 
+def attention_prefill(cfg: ModelConfig, p, x, positions):
+    """Causal attention that also returns the rotated *pre-repeat* K/V —
+    exactly the rows ``attention_decode`` would have appended to its
+    (B, S, KH, Dh) cache one token at a time.  This is the bulk-prefill
+    unit: one forward seeds the whole KV cache for a request group."""
+    from ..dist.hints import constrain
+
+    b, s, _ = x.shape
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].reshape(cfg.d_model, h, dh))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].reshape(cfg.d_model, kh, dh))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].reshape(cfg.d_model, kh, dh))
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(h, dh)
+        k = k + p["bk"].reshape(kh, dh)
+        v = v + p["bv"].reshape(kh, dh)
+    q = _rotate(cfg, q, positions)
+    k = _rotate(cfg, k, positions)
+    kv_k, kv_v = k, v  # cache rows: rotated, pre-repeat (KH heads)
+    if kh != h:
+        k = jnp.repeat(k, h // kh, axis=2)
+        v = jnp.repeat(v, h // kh, axis=2)
+    q = constrain(q, "dp", None, "model", None)
+    k = constrain(k, "dp", None, "model", None)
+    v = constrain(v, "dp", None, "model", None)
+    logits = jnp.einsum("bshd,bthd->bhst", q, k) / np.sqrt(dh)
+    if cfg.attn_logit_softcap:
+        c = cfg.attn_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    logits = jnp.where(causal, logits, jnp.finfo(logits.dtype).min)
+    w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", w, v).reshape(b, s, h * dh)
+    return out @ p["wo"], kv_k, kv_v
+
+
 def attention_chunked(cfg: ModelConfig, p, x, positions, blk: int = 2048):
     """Block-sparse causal attention with online softmax (flash-style).
 
@@ -197,10 +233,13 @@ def attention_chunked(cfg: ModelConfig, p, x, positions, blk: int = 2048):
 def attention_decode(cfg: ModelConfig, p, x, cache_k, cache_v, pos):
     """One-token decode against a KV cache.
 
-    x: (B, 1, D); cache_k/v: (B, S_max, KH, Dh); pos: () current index.
-    Returns (out, new_k, new_v)."""
+    x: (B, 1, D); cache_k/v: (B, S_max, KH, Dh); pos: () current index, or
+    (B,) per-row positions (continuous batching: every serve slot decodes
+    at its own depth).  Returns (out, new_k, new_v)."""
     b = x.shape[0]
     h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    pos = jnp.asarray(pos, dtype=jnp.int32)
+    per_row = pos.ndim == 1
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].reshape(cfg.d_model, h, dh))
     k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].reshape(cfg.d_model, kh, dh))
     v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].reshape(cfg.d_model, kh, dh))
@@ -208,13 +247,22 @@ def attention_decode(cfg: ModelConfig, p, x, cache_k, cache_v, pos):
         q = q + p["bq"].reshape(h, dh)
         k = k + p["bk"].reshape(kh, dh)
         v = v + p["bv"].reshape(kh, dh)
-    posb = jnp.full((b, 1), pos, dtype=jnp.int32)
+    posb = pos[:, None] if per_row else jnp.full((b, 1), pos, dtype=jnp.int32)
     if cfg.pos_embedding == "mrope":
         posb = jnp.broadcast_to(posb[None], (3, b, 1))
     q = _rotate(cfg, q, posb)
     k = _rotate(cfg, k, posb)
 
-    if kh != h:
+    if per_row:
+        # per-slot positions: each row writes its own cache index — a
+        # batched dynamic_update_slice does not exist, the row-wise
+        # iota-select is the batched form of the GQA path below
+        sel = (
+            jnp.arange(cache_k.shape[1], dtype=jnp.int32)[None, :] == pos[:, None]
+        )[:, :, None, None]
+        cache_k = jnp.where(sel, k.astype(cache_k.dtype), cache_k)
+        cache_v = jnp.where(sel, v.astype(cache_v.dtype), cache_v)
+    elif kh != h:
         # GQA: iota-select cache update — with the cache sequence-sharded,
         # dynamic_update_slice made GSPMD "involuntarily rematerialize"
         # (replicate) the cache; the select touches only local shards,
@@ -245,7 +293,10 @@ def attention_decode(cfg: ModelConfig, p, x, cache_k, cache_v, pos):
         c = cfg.attn_logit_softcap
         logits = c * jnp.tanh(logits / c)
     smax = cache_k.shape[1]
-    valid = (jnp.arange(smax) <= pos)[None, None, None, None, :]
+    if per_row:
+        valid = (jnp.arange(smax)[None, :] <= pos[:, None])[:, None, None, None, :]
+    else:
+        valid = (jnp.arange(smax) <= pos)[None, None, None, None, :]
     logits = jnp.where(valid, logits, jnp.finfo(logits.dtype).min)
     w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(x.dtype)
     out = jnp.einsum("bkgst,btkd->bskgd", w, cache_v).reshape(b, 1, h * dh)

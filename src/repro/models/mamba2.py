@@ -54,11 +54,13 @@ def _causal_conv(x, w):
     return jax.nn.silu(out)
 
 
-def ssd_chunked(xh, dt, a_log, bm, cm, chunk: int):
+def ssd_chunked(xh, dt, a_log, bm, cm, chunk: int, return_state: bool = False):
     """Chunked SSD scan.
 
     xh: (B,S,H,P) inputs; dt: (B,S,H) softplus'd steps; a_log: (H,) decay
-    logs; bm/cm: (B,S,N) input/output projections.  Returns (B,S,H,P).
+    logs; bm/cm: (B,S,N) input/output projections.  Returns (B,S,H,P), or
+    ``(y, final_state)`` with ``return_state`` — the (B,H,P,N) state after
+    the full sequence in the decode-step layout (bulk prefill seeding).
     """
     b, s, h, p = xh.shape
     n = bm.shape[-1]
@@ -105,7 +107,7 @@ def ssd_chunked(xh, dt, a_log, bm, cm, chunk: int):
         return new, prev  # emit state *entering* the chunk
 
     init = jnp.zeros((b, h, n, p), dtype=jnp.float32)
-    _, prev_states = jax.lax.scan(
+    final, prev_states = jax.lax.scan(
         step,
         init,
         (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)),
@@ -120,7 +122,11 @@ def ssd_chunked(xh, dt, a_log, bm, cm, chunk: int):
         decay_from_start,
     ).astype(xh.dtype)
 
-    return (y_intra + y_inter).reshape(b, s, h, p)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    if return_state:
+        # scan carry (B,H,N,P) -> decode-step layout (B,H,P,N)
+        return y, final.swapaxes(-1, -2)
+    return y
 
 
 def mamba2_block(cfg: ModelConfig, p, x):
@@ -138,6 +144,44 @@ def mamba2_block(cfg: ModelConfig, p, x):
     y = y.reshape(b, s, cfg.d_inner)
     y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
     return y @ p["out_proj"]
+
+
+def mamba2_prefill(cfg: ModelConfig, p, x, valid, lengths, state_dtype=None):
+    """Full-sequence mixer that also returns the decode state after each
+    row's ``lengths[i]`` real tokens (bulk prefill for serve slots).
+
+    x: (B, S, D) right-padded; valid: (B, S) bool; lengths: (B,) int32.
+    Returns (out (B,S,D), {"conv": (B, K-1, Di), "ssm": (B, H, P, N)}).
+    Padded positions take dt=0, so they decay the SSD state by exactly one
+    and contribute exactly zero — the final state is bitwise the state a
+    token-by-token decode would reach after the real tokens."""
+    b, s, _ = x.shape
+    h = cfg.ssm_heads
+    ph = cfg.d_inner // h
+    z, xs, bm, cm, dt = _split(cfg, x @ p["in_proj"])
+    xc = _causal_conv(xs, p["conv_w"])
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    dtf = jnp.where(valid[:, :, None], dtf, 0.0)
+    y, ssm = ssd_chunked(
+        xc.reshape(b, s, h, ph), dtf, p["A_log"], bm, cm, cfg.ssm_chunk,
+        return_state=True,
+    )
+    y = y + xc.reshape(b, s, h, ph) * p["D_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, s, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+
+    # conv tail: the K-1 raw in_proj outputs preceding each row's next
+    # token — exactly the rolling tail the decode step maintains (zeros
+    # flow in from the left for prompts shorter than the conv window)
+    pad = jnp.concatenate(
+        [jnp.zeros((b, CONV_K - 1, cfg.d_inner), xs.dtype), xs], axis=1
+    )
+    idx = lengths[:, None] + jnp.arange(CONV_K - 1, dtype=jnp.int32)[None, :]
+    conv = jnp.take_along_axis(pad, idx[:, :, None], axis=1)
+    if state_dtype is not None:
+        conv = conv.astype(state_dtype)
+    return out, {"conv": conv, "ssm": ssm}
 
 
 # ---------------------------------------------------------------------------

@@ -21,6 +21,7 @@ from .flags import scan_unroll
 from .layers import (
     attention,
     attention_decode,
+    attention_prefill,
     attn_param_shapes,
     ffn,
     ffn_param_shapes,
@@ -32,6 +33,7 @@ from .mamba2 import (
     mamba2_decode_state,  # noqa: F401  (re-exported: serve imports it here)
     mamba2_decode_step,
     mamba2_param_shapes,
+    mamba2_prefill,
     CONV_K,
 )
 from .moe import moe_ffn, moe_param_shapes
@@ -365,8 +367,122 @@ def abstract_decode_state(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.
     )
 
 
-def decode_step(cfg: ModelConfig, params, state, tokens, pos):
-    """One decode step.  tokens: (B, 1) int32; pos: () int32 current index.
+def decode_state_batch_dims(cfg: ModelConfig) -> dict:
+    """Index of the per-request batch axis in each decode-state leaf — the
+    axis the serve engine scatters admitted rows along."""
+    if cfg.family in ("dense", "moe"):
+        return {"k": 1, "v": 1}
+    if cfg.family == "ssm":
+        return {"tm_shift": 1, "cm_shift": 1, "wkv": 1}
+    if cfg.family == "hybrid":
+        return {"conv": 2, "ssm": 2, "k": 1, "v": 1}
+    raise ValueError(cfg.family)
+
+
+def prefill_forward(cfg: ModelConfig, params, tokens, lengths,
+                    state_dtype=jnp.bfloat16):
+    """Bulk prefill: one forward over a right-padded request group.
+
+    tokens: (B, S) int32 right-padded; lengths: (B,) int32 real lengths
+    (>= 1).  Returns (last-token logits (B, V) float32, decode-state tree
+    whose seq dimension — where one exists — is S).  Row i's state is the
+    state a token-by-token decode would hold after its ``lengths[i]`` real
+    tokens: pads contribute identity to every recurrence (masked k/w/dt),
+    pad KV rows sit beyond the decode validity mask, and shift/conv tails
+    are gathered per row at ``lengths - 1``.  Rows are computed
+    independently, so a request's output does not depend on its batch
+    companions (the scheduler-equivalence property)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype=x.dtype)
+    positions = positions_for(cfg, b, s)
+    valid = jnp.arange(s, dtype=jnp.int32)[None, :] < lengths[:, None]
+    last = (lengths - 1).astype(jnp.int32)
+
+    def row_last(a):  # (B, S, D) -> (B, D) at each row's final real token
+        return jnp.take_along_axis(a, last[:, None, None], axis=1)[:, 0]
+
+    if cfg.family in ("dense", "moe"):
+        cap = b * s * cfg.moe_top_k if cfg.family == "moe" else None
+
+        def body(h, lp):
+            a, ck, cv = attention_prefill(
+                cfg, lp["attn"], rms_norm(h, lp["ln1"], cfg.norm_eps), positions
+            )
+            h = h + a
+            if cfg.family == "moe":
+                f, _ = moe_ffn(
+                    cfg, lp["moe"], rms_norm(h, lp["ln2"], cfg.norm_eps), cap=cap
+                )
+            else:
+                f = ffn(cfg, lp["ffn"], rms_norm(h, lp["ln2"], cfg.norm_eps))
+            return h + f, (ck.astype(state_dtype), cv.astype(state_dtype))
+
+        x, (nk, nv) = jax.lax.scan(body, x, params["layers"], unroll=scan_unroll())
+        state = {"k": nk, "v": nv}
+
+    elif cfg.family == "ssm":
+
+        def body(h, lp):
+            xn1 = rms_norm(h, lp["ln1"], cfg.norm_eps)
+            out, wkv = rwkv6_time_mix(
+                cfg, lp["tm"], xn1, valid=valid, return_state=True
+            )
+            h = h + out
+            xn2 = rms_norm(h, lp["ln2"], cfg.norm_eps)
+            h = h + rwkv6_channel_mix(cfg, lp["cm"], xn2)
+            return h, (
+                row_last(xn1).astype(jnp.float32),
+                row_last(xn2).astype(jnp.float32),
+                wkv,
+            )
+
+        x, (tms, cms, wkv) = jax.lax.scan(
+            body, x, params["layers"], unroll=scan_unroll()
+        )
+        state = {"tm_shift": tms, "cm_shift": cms, "wkv": wkv}
+
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+
+        def group(h, gp):
+            def inner(h2, lp):
+                out, st = mamba2_prefill(
+                    cfg, lp["mix"], rms_norm(h2, lp["ln"], cfg.norm_eps),
+                    valid, lengths, state_dtype=state_dtype,
+                )
+                return h2 + out, (st["conv"], st["ssm"])
+
+            h, (nconv, nssm) = jax.lax.scan(inner, h, gp, unroll=scan_unroll())
+            a, ck, cv = attention_prefill(
+                cfg, shared["attn"], rms_norm(h, shared["ln1"], cfg.norm_eps),
+                positions,
+            )
+            h = h + a
+            h = h + ffn(cfg, shared["ffn"], rms_norm(h, shared["ln2"], cfg.norm_eps))
+            return h, (nconv, nssm, ck.astype(state_dtype), cv.astype(state_dtype))
+
+        x, (nconv, nssm, nk, nv) = jax.lax.scan(
+            group, x, params["layers"], unroll=scan_unroll()
+        )
+        state = {"conv": nconv, "ssm": nssm, "k": nk, "v": nv}
+    else:
+        raise ValueError(cfg.family)
+
+    xl = rms_norm(row_last(x), params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (xl @ head).astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab:
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logits, state
+
+
+def decode_step(cfg: ModelConfig, params, state, tokens, pos, moe_cap=None):
+    """One decode step.  tokens: (B, 1) int32; pos: () int32 current index
+    or (B,) per-slot positions (continuous batching).  ``moe_cap``
+    overrides MoE expert capacity (serving passes drop-free B*k).
     Returns (logits (B, V) float32, new state)."""
     x = params["embed"][tokens]
     if cfg.embed_scale:
@@ -381,7 +497,10 @@ def decode_step(cfg: ModelConfig, params, state, tokens, pos):
             )
             h = h + a
             if cfg.family == "moe":
-                f, _ = moe_ffn(cfg, lp["moe"], rms_norm(h, lp["ln2"], cfg.norm_eps))
+                f, _ = moe_ffn(
+                    cfg, lp["moe"], rms_norm(h, lp["ln2"], cfg.norm_eps),
+                    cap=moe_cap,
+                )
             else:
                 f = ffn(cfg, lp["ffn"], rms_norm(h, lp["ln2"], cfg.norm_eps))
             return h + f, (nk, nv)

@@ -45,8 +45,13 @@ def capacity(cfg: ModelConfig, n_tokens: int) -> int:
     return max(8, -(-c // 8) * 8)  # round up to 8 for TPU-friendly shapes
 
 
-def moe_ffn(cfg: ModelConfig, p, x):
-    """x: (B, S, D) -> (B, S, D), plus the load-balance aux loss."""
+def moe_ffn(cfg: ModelConfig, p, x, cap: int | None = None):
+    """x: (B, S, D) -> (B, S, D), plus the load-balance aux loss.
+
+    ``cap`` overrides the per-expert capacity; serving passes the drop-free
+    ``t * k`` so no token is ever displaced by capacity competition — token
+    outputs then depend only on the token itself, which is what makes
+    mixed-request prefill batches bitwise row-independent."""
     b, s, d = x.shape
     t = b * s
     k, e = cfg.moe_top_k, cfg.n_experts
@@ -67,7 +72,8 @@ def moe_ffn(cfg: ModelConfig, p, x):
     run_start = jnp.searchsorted(sorted_e, jnp.arange(e, dtype=flat_e.dtype))
     pos_sorted = jnp.arange(t * k, dtype=jnp.int32) - run_start[sorted_e]
     pos_in_e = jnp.zeros((t * k,), dtype=jnp.int32).at[order].set(pos_sorted)
-    cap = capacity(cfg, t)
+    if cap is None:
+        cap = capacity(cfg, t)
     keep = pos_in_e < cap
     slot = jnp.where(keep, pos_in_e, cap)  # overflow -> scratch row
 

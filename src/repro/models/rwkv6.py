@@ -60,8 +60,11 @@ def _decay(p, xw):
     return jnp.exp(-jnp.exp((p["w0"] + lora).astype(jnp.float32)))
 
 
-def wkv6_chunked(r, k, v, w, u, chunk: int):
-    """Chunk-parallel WKV: r/k/v/w: (B,S,H,K); u: (H,K). Returns (B,S,H,K).
+def wkv6_chunked(r, k, v, w, u, chunk: int, return_state: bool = False):
+    """Chunk-parallel WKV: r/k/v/w: (B,S,H,K); u: (H,K). Returns (B,S,H,K),
+    or ``(y, final_state)`` with ``return_state`` — the (B,H,K,K) state
+    after the full sequence, i.e. what the O(1) decode recurrence would
+    hold after stepping through the same tokens (bulk prefill).
 
     Within a chunk, pairwise decay products come from cumulative log-decay
     differences; across chunks the state recurrence runs at chunk rate.
@@ -101,18 +104,29 @@ def wkv6_chunked(r, k, v, w, u, chunk: int):
         return prev * dec[..., None] + st, prev
 
     init = jnp.zeros((b, h, kk, kk), dtype=jnp.float32)
-    _, prev_states = jax.lax.scan(
+    final, prev_states = jax.lax.scan(
         step, init, (chunk_states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1))
     )
     prev_states = prev_states.swapaxes(0, 1)  # (B,C,H,K,V) state entering chunk
 
     # r_i picks up the entering state decayed from chunk start to i-1
     y_inter = jnp.einsum("bcihk,bchkv->bcihv", ri, prev_states)
-    return (y + y_inter).reshape(b, s, h, kk)
+    out = (y + y_inter).reshape(b, s, h, kk)
+    if return_state:
+        return out, final  # scan carry = state after the last chunk
+    return out
 
 
-def rwkv6_time_mix(cfg: ModelConfig, p, x, shift_last=None, state=None):
-    """Training path (full sequence). Returns output (B,S,D)."""
+def rwkv6_time_mix(cfg: ModelConfig, p, x, shift_last=None, state=None,
+                   valid=None, return_state: bool = False):
+    """Training path (full sequence). Returns output (B,S,D), plus the
+    final (B,H,K,K) WKV state with ``return_state`` (bulk prefill).
+
+    ``valid`` (B,S) bool masks right-padding for mixed-length request
+    groups: a padded position contributes identity to the recurrence
+    (k=0, w=1), so the final state equals the state after each row's real
+    tokens — outputs at real positions are untouched because adding an
+    exact zero and decaying by exactly one are value-preserving."""
     b, s, d = x.shape
     h = d // cfg.rwkv_head_dim
     kk = cfg.rwkv_head_dim
@@ -126,12 +140,20 @@ def rwkv6_time_mix(cfg: ModelConfig, p, x, shift_last=None, state=None):
     g = jax.nn.silu(xg @ p["wg"])
     w = _decay(p, xw).reshape(b, s, h, kk)
     u = p["u"].reshape(h, kk)
-    y = wkv6_chunked(r, k, v, w, u, min(cfg.ssm_chunk or 64, s))
+    if valid is not None:
+        vm = valid[:, :, None, None]
+        k = jnp.where(vm, k, 0.0)
+        w = jnp.where(vm, w, 1.0)
+    y = wkv6_chunked(r, k, v, w, u, min(cfg.ssm_chunk or 64, s),
+                     return_state=return_state)
+    if return_state:
+        y, final = y
     y = y.reshape(b, s, d).astype(x.dtype)
     y = rms_norm(y, p["ln_x"], cfg.norm_eps) * g
     # fp32 mu_*/decay params promote intermediates; keep the residual
     # stream in the input dtype
-    return (y @ p["wo"]).astype(x.dtype)
+    out = (y @ p["wo"]).astype(x.dtype)
+    return (out, final) if return_state else out
 
 
 def rwkv6_channel_mix(cfg: ModelConfig, p, x, shift_last=None):
