@@ -20,6 +20,8 @@ from repro.launch.dryrun import (  # reuse the parsing tables
     _GROUPS_RE,
     _shape_bytes,
 )
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 
 _META_RE = re.compile(r'op_name="([^"]+)"')
 
@@ -52,7 +54,25 @@ def _group_size(line: str, default: int) -> int:
 
 
 def attribute(hlo_text: str, n_devices: int) -> list[tuple[str, str, float, int]]:
-    """Returns [(bucket, op_kind, link_bytes_per_device, count)] sorted desc."""
+    """Returns [(bucket, op_kind, link_bytes_per_device, count)] sorted desc.
+
+    The parse runs under an obs span and the per-kind byte totals are
+    published as ``bench.attrib.*`` metrics, so attribution numbers sit
+    in the same registry (and, when tracing, the same timeline) as the
+    live comm counters they explain."""
+    with _trace.span("bench.attrib", n_devices=n_devices,
+                     hlo_bytes=len(hlo_text)):
+        rows = _attribute(hlo_text, n_devices)
+    per_kind: dict[str, float] = defaultdict(float)
+    for _bucket, op, b, c in rows:
+        per_kind[op] += b
+        _metrics.counter(f"bench.attrib.count.{op}").inc(c)
+    for op, b in per_kind.items():
+        _metrics.gauge(f"bench.attrib.bytes.{op}").set(b)
+    return rows
+
+
+def _attribute(hlo_text: str, n_devices: int) -> list[tuple[str, str, float, int]]:
     acc: dict[tuple[str, str], list] = defaultdict(lambda: [0.0, 0])
     for line in hlo_text.splitlines():
         m = _COLL_RE.search(line)

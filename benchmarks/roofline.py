@@ -26,6 +26,9 @@ import json
 import sys
 from pathlib import Path
 
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
+
 PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9       # bytes/s / chip
 LINK_BW = 50e9       # bytes/s / link
@@ -69,19 +72,28 @@ def analyze_record(rec: dict) -> dict | None:
 
 
 def load(path: str | Path) -> list[dict]:
+    """Parse + analyze the dry-run records under an obs span; dominant
+    -term tallies land in the ``bench.roofline.*`` metrics so roofline
+    conclusions share the registry with the live counters."""
     out = []
-    for line in open(path):
-        rec = json.loads(line)
-        row = analyze_record(rec)
-        if row is not None:
-            out.append(row)
-        elif rec.get("status") == "skipped":
-            out.append(
-                {
-                    **{k: rec[k] for k in ("arch", "shape", "mesh")},
-                    "skipped": rec["reason"],
-                }
-            )
+    with _trace.span("bench.roofline.load", records=str(path)):
+        for line in open(path):
+            rec = json.loads(line)
+            row = analyze_record(rec)
+            if row is not None:
+                out.append(row)
+            elif rec.get("status") == "skipped":
+                out.append(
+                    {
+                        **{k: rec[k] for k in ("arch", "shape", "mesh")},
+                        "skipped": rec["reason"],
+                    }
+                )
+    for r in out:
+        _metrics.counter(
+            "bench.roofline.dominant." + r.get("dominant", "skip")
+        ).inc()
+    _metrics.gauge("bench.roofline.rows").set(len(out))
     return out
 
 

@@ -6,6 +6,11 @@ processes over the file-based PythonMPI:
     PYTHONPATH=src python examples/quickstart.py            # thread SPMD, Np=4
     PYTHONPATH=src python examples/quickstart.py --np 8
     PYTHONPATH=src python examples/quickstart.py --processes # pRUN + file MPI
+
+Traced run (writes one merged Chrome-trace JSON — open in Perfetto):
+
+    PYTHONPATH=src python examples/quickstart.py --processes --trace
+    PYTHONPATH=src python -m repro.obs.report traces/*.json
 """
 
 import argparse
@@ -59,12 +64,20 @@ def main() -> None:
     ap.add_argument("--np", type=int, default=4)
     ap.add_argument("--processes", action="store_true",
                     help="real processes over file-based PythonMPI")
+    ap.add_argument("--trace", action="store_true",
+                    help="per-rank tracing; ranks merge one Chrome-trace "
+                         "JSON into ./traces at exit (--processes only)")
     args = ap.parse_args()
 
     if args.processes:
+        import os
+
         from repro.launch import pRUN
 
-        res = pRUN("examples.quickstart:spmd_main", args.np, timeout=300)
+        if args.trace:
+            os.environ.setdefault("PPYTHON_TRACE_DIR", "traces")
+        res = pRUN("examples.quickstart:spmd_main", args.np, timeout=300,
+                   trace=args.trace or None)
         print("per-rank results:", res)
     else:
         res = run_spmd(spmd_main, args.np)

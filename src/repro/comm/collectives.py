@@ -70,13 +70,15 @@ transports (FileMPI) pin by construction and pay no extra copy.
 
 from __future__ import annotations
 
+import functools
 import hashlib
 import os
-import threading
 from typing import Any, Callable, Sequence
 
 import numpy as np
 
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
 from .context import CommContext, _freeze, ctx_counter
 
 __all__ = [
@@ -169,46 +171,69 @@ def select_gather(size: int) -> str:
 # ---------------------------------------------------------------------------
 
 
-class _CollStats:
-    """Process-wide counters over collective data movement.
-
-    ``ring_hops_into``   ring hops received into persistent staging or
-                         final storage via ``irecv_into`` (no fresh
-                         receive buffer);
-    ``ring_hops_alloc``  ring hops that still allocate a fresh receive
-                         buffer (the unstaged fallback paths);
-    ``staging_allocs``   persistent per-group staging buffers created
-                         (steady state: zero — buffers are reused).
-    """
-
-    def __init__(self) -> None:
-        self._lock = threading.Lock()
-        self.reset()
-
-    def reset(self) -> None:
-        self._c = {"ring_hops_into": 0, "ring_hops_alloc": 0,
-                   "staging_allocs": 0}
-
-    def add(self, **deltas: int) -> None:
-        with self._lock:
-            for k, v in deltas.items():
-                self._c[k] += v
-
-    def snapshot(self) -> dict[str, int]:
-        with self._lock:
-            return dict(self._c)
-
-
-_coll_stats = _CollStats()
+# Process-wide counters over collective data movement, living in the
+# obs.metrics registry under the "coll." prefix:
+#
+#   ring_hops_into    ring hops received into persistent staging or
+#                     final storage via ``irecv_into`` (no fresh
+#                     receive buffer);
+#   ring_hops_alloc   ring hops that still allocate a fresh receive
+#                     buffer (the unstaged fallback paths);
+#   staging_allocs    persistent per-group staging buffers created
+#                     (steady state: zero — buffers are reused).
+_COLL_KEYS = ("ring_hops_into", "ring_hops_alloc", "staging_allocs")
+_COLL = {k: _metrics.counter("coll." + k) for k in _COLL_KEYS}
 
 
 def coll_stats() -> dict[str, int]:
-    """Counters of collective hop mechanics since the last reset."""
-    return _coll_stats.snapshot()
+    """Counters of collective hop mechanics since the last reset — a
+    view over the ``coll.*`` counters in ``repro.obs.metrics``."""
+    return {k: c.value for k, c in _COLL.items()}
 
 
 def reset_coll_stats() -> None:
-    _coll_stats.reset()
+    """Thin alias of ``repro.obs.metrics.reset()``: one reset zeroes
+    every registry metric (redist, collectives, serve)."""
+    _metrics.reset()
+
+
+def _traced_coll(op: str):
+    """Span each collective entry point (group size + op attached);
+    free when tracing is disabled — one module-attribute check."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(self, *args, **kwargs):
+            if not _trace.enabled:
+                return fn(self, *args, **kwargs)
+            with _trace.span("coll." + op, size=self.size, rank=self.rank):
+                return fn(self, *args, **kwargs)
+
+        return wrapper
+
+    return deco
+
+
+def _traced_hier(op: str):
+    """Span the two-level (intra-node + leader) composite path.  The
+    per-leg work shows up as the nested ``coll.*`` spans of the intra
+    and leader sub-groups; this outer span marks the composite and its
+    topology (node count, local width)."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(self, *args):
+            if not _trace.enabled:
+                return fn(self, *args)
+            parts = args[-1]
+            with _trace.span("coll.two_level", op=op,
+                             intra_width=len(parts[0]),
+                             nodes=len(parts[1])):
+                return fn(self, *args)
+
+        return wrapper
+
+    return deco
 
 
 # ---------------------------------------------------------------------------
@@ -357,7 +382,7 @@ class Group:
         """Blocking receive landing in ``buffer`` (a ring-hop primitive:
         serializing transports decode payload bytes straight into it)."""
         self.ctx.irecv_into(self.ranks[src], tag, buffer).wait()
-        _coll_stats.add(ring_hops_into=1)
+        _COLL["ring_hops_into"].inc()
 
     def _eager(self) -> int:
         """This group's eager/rendezvous switch point: the env var if
@@ -372,7 +397,7 @@ class Group:
         if buf is None or buf.size < nelems:
             buf = np.empty(nelems, dtype=dtype)
             self._staging[key] = buf
-            _coll_stats.add(staging_allocs=1)
+            _COLL["staging_allocs"].inc()
         return buf
 
     # -- topology (two-level selection over HierComm) ----------------------
@@ -463,6 +488,7 @@ class Group:
     # arrival-ordered ring drain (usually amortized into a single wake).
     _INTRA_FLAT_MAX = 8
 
+    @_traced_hier("allreduce")
     def _allreduce_hier(self, value: Any, op: Callable, base, parts) -> Any:
         """Intra-node reduce → leader allreduce → intra-node bcast.  The
         wire leg moves one payload per *node*; the leaders' flat
@@ -492,6 +518,7 @@ class Group:
         return intra.bcast(partial, root=leader, tag=(base, "b"),
                            algo="linear" if flat else None)
 
+    @_traced_hier("bcast")
     def _bcast_hier(self, obj: Any, rootg: int, base, parts) -> Any:
         """Root hands off to its node leader (if distinct), leaders
         broadcast across nodes, every leader fans out within its node."""
@@ -515,6 +542,7 @@ class Group:
             val, root=intra_pids[0], tag=(base, "n"))
         return obj if me == root_pid else val
 
+    @_traced_hier("barrier")
     def _barrier_hier(self, base, parts) -> None:
         """Arrive: intra gather to the leader; leaders run the flat
         dissemination barrier; release: intra bcast.  No rank passes the
@@ -527,6 +555,7 @@ class Group:
             group_of(self.ctx, leader_pids).barrier(tag=(base, "x"))
         intra.bcast(None, root=leader, tag=(base, "out"))
 
+    @_traced_hier("allgather")
     def _allgather_hier(self, obj: Any, base, parts) -> list:
         """Intra gather → leaders allgather (payloads ride with their
         outer group ranks) → leader assembles → intra bcast."""
@@ -545,6 +574,7 @@ class Group:
             out = None
         return intra.bcast(out, root=leader, tag=(base, "b"))
 
+    @_traced_hier("reduce_scatter")
     def _reduce_scatter_hier(self, arr: np.ndarray, op: Callable, base,
                              parts) -> np.ndarray:
         """Intra reduce of the full vector to the leader, then a leaders
@@ -582,6 +612,7 @@ class Group:
 
     # -- broadcast ---------------------------------------------------------
 
+    @_traced_coll("bcast")
     def bcast(self, obj: Any = None, root: int | None = None, tag: Any = None,
               algo: str | None = None) -> Any:
         me = self._require_member()
@@ -613,6 +644,8 @@ class Group:
                 else:
                     algo = select_bcast(payload_nbytes(obj), self.size,
                                         eager=self._eager())
+            if _trace.enabled:
+                _trace.instant("coll.algo", op="bcast", algo=algo)
             if algo == "tree":
                 if byref and isinstance(obj, np.ndarray):
                     # ONE pinning copy at the root; the frozen buffer then
@@ -708,6 +741,7 @@ class Group:
 
     # -- reduce ------------------------------------------------------------
 
+    @_traced_coll("reduce")
     def reduce(self, value: Any, op: Callable, root: int | None = None,
                tag: Any = None) -> Any:
         """Binomial-tree reduction to ``root`` (commutative ``op``); the
@@ -733,6 +767,7 @@ class Group:
 
     # -- gather ------------------------------------------------------------
 
+    @_traced_coll("gather")
     def gather(self, obj: Any, root: int | None = None, tag: Any = None,
                algo: str | None = None) -> list | None:
         me = self._require_member()
@@ -742,6 +777,8 @@ class Group:
         base = self._base_tag("ga", tag)
         if algo is None:
             algo = select_gather(self.size)
+        if _trace.enabled:
+            _trace.instant("coll.algo", op="gather", algo=algo)
         if algo == "tree":
             return self._gather_tree(obj, rootg, base)
         # flat: one isend per child, the root completes receives in
@@ -773,6 +810,7 @@ class Group:
 
     # -- allgather ---------------------------------------------------------
 
+    @_traced_coll("allgather")
     def allgather(self, obj: Any, tag: Any = None,
                   algo: str | None = None) -> list:
         me = self._require_member()
@@ -821,6 +859,7 @@ class Group:
 
     # -- allreduce ---------------------------------------------------------
 
+    @_traced_coll("allreduce")
     def allreduce(self, value: Any, op: Callable, tag: Any = None,
                   algo: str | None = None) -> Any:
         """Reduce ``value`` with commutative ``op`` and deliver the result
@@ -872,6 +911,9 @@ class Group:
             # unstaged ring circulates frozen received buffers for free —
             # keep the reference-forwarding path there
             staged = False
+        if _trace.enabled:
+            _trace.instant("coll.algo", op="allreduce", algo=algo,
+                           staged=staged)
         if algo == "gather":
             # seed baseline: allgather every contribution, reduce
             # redundantly on all P ranks
@@ -1015,7 +1057,7 @@ class Group:
             self._send(right, (base, "rs", step), chunks[si])
             chunks[ri] = _combine(op, chunks[ri],
                                   self._recv(left, (base, "rs", step)))
-            _coll_stats.add(ring_hops_alloc=1)
+            _COLL["ring_hops_alloc"].inc()
         return chunks
 
     def _ring_allgather_chunks(self, chunks: list, base) -> list:
@@ -1026,11 +1068,12 @@ class Group:
             ri = (me - 1 - step) % self.size
             self._send(right, (base, "rag", step), chunks[si])
             chunks[ri] = self._freeze_hop(self._recv(left, (base, "rag", step)))
-            _coll_stats.add(ring_hops_alloc=1)
+            _COLL["ring_hops_alloc"].inc()
         return chunks
 
     # -- reduce_scatter ----------------------------------------------------
 
+    @_traced_coll("reduce_scatter")
     def reduce_scatter(self, value: np.ndarray, op: Callable,
                        tag: Any = None,
                        algo: str | None = None) -> np.ndarray:
@@ -1052,6 +1095,7 @@ class Group:
 
     # -- alltoallv ---------------------------------------------------------
 
+    @_traced_coll("alltoallv")
     def alltoallv(self, sendlist: Sequence[Any], tag: Any = None) -> list:
         """Personalized exchange: ``sendlist[g]`` goes to group rank ``g``;
         returns the payloads received, indexed by source group rank.
@@ -1081,6 +1125,7 @@ class Group:
 
     # -- barrier -----------------------------------------------------------
 
+    @_traced_coll("barrier")
     def barrier(self, tag: Any = None, algo: str | None = None) -> None:
         """Dissemination barrier: ceil(log2 P) rounds, no root.  The seed
         ``central`` gather-and-release survives as the benchmark baseline."""

@@ -476,8 +476,11 @@ def init(ctx: CommContext | None = None) -> CommContext:
                 )
         else:
             ctx = LocalComm()
-    _global_ctx = ctx
-    return ctx
+    # no-op unless PPYTHON_TRACE=1: wraps p2p entry points with spans
+    from ..obs.trace import instrument_context
+
+    _global_ctx = instrument_context(ctx)
+    return _global_ctx
 
 
 def set_context(ctx: CommContext | None) -> None:

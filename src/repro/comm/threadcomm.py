@@ -195,8 +195,11 @@ def run_spmd(
     results: list[Any] = [None] * np_
     errors: list[BaseException | None] = [None] * np_
 
+    from ..obs.trace import instrument_context
+
     def body(pid: int) -> None:
-        set_context(ThreadComm(world, pid))
+        # no-op unless PPYTHON_TRACE=1
+        set_context(instrument_context(ThreadComm(world, pid)))
         try:
             results[pid] = fn(*args)
         except BaseException as e:  # noqa: BLE001 - surfaced to caller

@@ -60,6 +60,8 @@ from typing import Any
 
 import numpy as np
 
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
 from .dmap import Dmap
 from .pitfalls import falls_list_indices, falls_list_intersect
 
@@ -187,37 +189,28 @@ _STAT_KEYS = (
 )
 
 
-class _ExecStats:
-    def __init__(self) -> None:
-        self._lock = threading.Lock()
-        self._c = dict.fromkeys(_STAT_KEYS, 0)
-
-    def add(self, **deltas: int) -> None:
-        with self._lock:
-            for k, v in deltas.items():
-                self._c[k] += v
-
-    def snapshot(self) -> dict[str, int]:
-        with self._lock:
-            return dict(self._c)
-
-    def reset(self) -> None:
-        with self._lock:
-            for k in self._c:
-                self._c[k] = 0
+# The counters live in the process-wide obs.metrics registry under the
+# "redist." prefix; exec_stats() is a view over them.
+_EXEC = {k: _metrics.counter("redist." + k) for k in _STAT_KEYS}
 
 
-_exec_stats = _ExecStats()
+def _exec_add(**deltas: int) -> None:
+    for k, v in deltas.items():
+        _EXEC[k].inc(v)
 
 
 def exec_stats() -> dict[str, int]:
-    """Data-movement counters of the execution engine (benchmark hook)."""
-    return _exec_stats.snapshot()
+    """Data-movement counters of the execution engine (benchmark hook) —
+    a view over the ``redist.*`` counters in ``repro.obs.metrics``."""
+    return {k: c.value for k, c in _EXEC.items()}
 
 
 def reset_exec_stats() -> None:
-    """Zero the execution counters without dropping any cached plans."""
-    _exec_stats.reset()
+    """Thin alias of ``repro.obs.metrics.reset()``: one reset zeroes
+    every registry metric (redist, collectives, serve) so the three
+    legacy reset entry points can never drift apart.  Cached plans are
+    untouched."""
+    _metrics.reset()
 
 
 # ---------------------------------------------------------------------------
@@ -749,7 +742,7 @@ class _BoundSchedule:
                 got = req.wait()
                 if finish is not None:
                     finish(got)
-        _exec_stats.add(**self.stat_deltas)
+        _exec_add(**self.stat_deltas)
 
 
 def _descs_flat_indices(xf: _Xfer, local_shape) -> np.ndarray:
@@ -806,7 +799,8 @@ class RedistPlan:
         comp = self._compiled
         if (comp is None or comp.src_shape != src_shape
                 or comp.dst_shape != dst_shape):
-            comp = _CompiledPlan(self, src_shape, dst_shape)
+            with _trace.span("redist.compile", msgs=self.msg_count):
+                comp = _CompiledPlan(self, src_shape, dst_shape)
             self._compiled = comp
         return comp
 
@@ -866,11 +860,15 @@ class RedistPlan:
             # the compiled index arithmetic assumes C-contiguous locals
             # (always true for Dmat-allocated buffers); anything exotic
             # takes the general fancy-index path
-            return self.execute_naive(dst, src)
+            with _trace.span("redist.execute", msgs=self.msg_count,
+                             path="naive"):
+                return self.execute_naive(dst, src)
         ctx = dst.ctx
         by_ref = bool(getattr(ctx, "payload_by_reference", False))
         views = by_ref and _thread_views_enabled()
-        self._bind(src.local, dst.local, by_ref, views).run(ctx, self.tag)
+        with _trace.span("redist.execute", msgs=self.msg_count,
+                         path="compiled"):
+            self._bind(src.local, dst.local, by_ref, views).run(ctx, self.tag)
 
     # -- naive (v2) execution --------------------------------------------------
 
@@ -900,7 +898,7 @@ class RedistPlan:
                 block_shape = tuple(len(p) for p in dst_pos)
                 dst.local[np.ix_(*dst_pos)] = block.reshape(block_shape)
                 copies += 1
-        _exec_stats.add(
+        _exec_add(
             messages=len(self.sends), bytes=sent_bytes, copies=copies,
             naive_executions=1,
         )
@@ -1013,11 +1011,15 @@ def get_plan(
     if use_cache is None:
         use_cache = _cache_enabled()
     if not use_cache:
-        return build_plan(src_dmap, src_shape, dst_dmap, dst_shape, region, me)
+        with _trace.span("redist.plan_build", cache="off"):
+            return build_plan(src_dmap, src_shape, dst_dmap, dst_shape,
+                              region, me)
     key = (src_dmap, src_shape, dst_dmap, dst_shape, region, me)
     plan = _plan_cache.get(key)
     if plan is None:
-        plan = build_plan(src_dmap, src_shape, dst_dmap, dst_shape, region, me)
+        with _trace.span("redist.plan_build", cache="miss"):
+            plan = build_plan(src_dmap, src_shape, dst_dmap, dst_shape,
+                              region, me)
         _plan_cache.put(key, plan)
     return plan
 
@@ -1033,13 +1035,14 @@ def plan_cache_stats() -> dict[str, Any]:
         "entries": len(_plan_cache),
         "hit_rate": (hits / total) if total else 0.0,
     }
-    out.update(_exec_stats.snapshot())
+    out.update(exec_stats())
     return out
 
 
 def clear_plan_cache() -> None:
     _plan_cache.clear()
-    _exec_stats.reset()
+    for c in _EXEC.values():
+        c.reset()
 
 
 # ---------------------------------------------------------------------------

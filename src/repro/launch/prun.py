@@ -133,6 +133,7 @@ def pRUN(
     env: dict[str, str] | None = None,
     collect_results: bool = True,
     nodes: int | None = None,
+    trace: bool | None = None,
 ) -> list[Any]:
     """Launch ``np_`` SPMD instances of ``target``; return per-rank results.
 
@@ -143,6 +144,12 @@ def pRUN(
     fingerprint by hostname, so a single-machine hier run is one node.
     Results are only collected for ``module:function`` targets (scripts
     run for side effects, matching the paper's usage).
+
+    ``trace`` forces per-rank tracing on (``True``) or off (``False``)
+    in the workers regardless of the launcher's ``PPYTHON_TRACE``;
+    ``None`` inherits the environment.  Traced process workers merge
+    their buffers at shutdown into one Chrome-trace JSON under
+    ``PPYTHON_TRACE_DIR`` (see ``repro.obs``).
     """
     transport = (transport or os.environ.get("PPYTHON_TRANSPORT")
                  or "file").lower()
@@ -182,6 +189,10 @@ def pRUN(
     base_env.update(env or {})
     base_env["PPYTHON_NP"] = str(np_)
     base_env["PPYTHON_TRANSPORT"] = transport
+    if trace is not None:
+        base_env["PPYTHON_TRACE"] = "1" if trace else "0"
+        if trace:
+            base_env.setdefault("PPYTHON_TRACE_DIR", os.getcwd())
     # the directory doubles as the result mailbox in every mode; only the
     # file transport also sends messages through it
     base_env["PPYTHON_COMM_DIR"] = str(comm_dir)
@@ -355,6 +366,16 @@ def prun_worker(target: str, argv: Sequence[str]) -> None:
             with open(tmp, "wb") as f:
                 pickle.dump(result, f, protocol=5)
             os.rename(tmp, out)
+        from ..obs import trace as _trace
+
+        if _trace.enabled:
+            # collective (all ranks reach here only if every body
+            # succeeded — a failed rank skips it and the launcher kills
+            # the stragglers): align clocks, gather buffers, rank 0
+            # writes the merged Chrome trace
+            merged = _trace.merge_traces(ctx)
+            if merged is not None:
+                print(f"pRUN: merged trace -> {merged}", file=sys.stderr)
     finally:
         ctx.finalize()
 

@@ -27,6 +27,7 @@ from ..dist.sharding import (
     param_shardings,
 )
 from ..models import init_params
+from ..obs import trace as _trace
 from ..train.checkpoint import CheckpointManager
 from ..train.data import batch_iterator
 from ..train.optimizer import AdamWConfig
@@ -108,7 +109,9 @@ def main(argv=None) -> int:
                                           start_step=start):
             if step >= args.steps:
                 break
-            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            with _trace.span("train.step", step=step,
+                             tokens=args.batch * args.seq):
+                params, opt_state, metrics = step_fn(params, opt_state, batch)
             if step % 5 == 0 or step == args.steps - 1:
                 print(f"[train] step {step:4d} loss {float(metrics['loss']):8.4f} "
                       f"lr {float(metrics['lr']):.2e} "

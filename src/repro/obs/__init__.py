@@ -1,0 +1,40 @@
+"""Observability: per-rank tracing, a process-wide metrics registry, and
+cross-rank merged Chrome-trace timelines.
+
+* ``repro.obs.trace`` — ``span()``/``instant()`` recording into a
+  preallocated ring buffer; ``PPYTHON_TRACE=1`` enables, default off
+  with a one-attribute-check fast path.  ``merge_traces(ctx)`` aligns
+  rank clocks and writes one Perfetto-loadable JSON per run.
+* ``repro.obs.metrics`` — named counters/gauges/histograms with
+  ``snapshot()``/``delta()``/``reset()``; the legacy stats dicts
+  (redist exec stats, collective hop stats, serve stats) are views
+  over it.
+* ``repro.obs.report`` — ``python -m repro.obs.report TRACE.json``
+  summarizes per-op time/bytes/bandwidth and per-rank comm-vs-compute.
+
+Stdlib-only: safe to import from the comm package and from pRUN
+workers before NumPy/JAX come up.
+"""
+
+from . import metrics, trace
+from .trace import (
+    disable_trace,
+    enable_trace,
+    instant,
+    instrument_context,
+    merge_traces,
+    reset_trace,
+    span,
+)
+
+__all__ = [
+    "metrics",
+    "trace",
+    "span",
+    "instant",
+    "enable_trace",
+    "disable_trace",
+    "reset_trace",
+    "instrument_context",
+    "merge_traces",
+]

@@ -39,9 +39,22 @@ import numpy as np
 from ..models import decode_step, init_decode_state, model_forward
 from ..models.config import ModelConfig
 from ..models.model import prefill_forward
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
 from .scheduler import Request, Scheduler
 
 _NO_EOS = -1  # sentinel: sampled ids are always >= 0, so -1 never matches
+
+# distinguishes each engine's metrics in the process-wide registry
+_ENGINE_IDS = itertools.count()
+
+_COUNTER_NAMES = (
+    "prefill_steps",
+    "decode_steps",
+    "slot_steps_total",
+    "slot_steps_active",
+    "tokens_generated",
+)
 
 
 def make_prefill_step(cfg: ModelConfig, remat: bool = False,
@@ -188,15 +201,16 @@ class ContinuousBatchingEngine:
         self.sched = Scheduler(slots, max_queue=max_queue, min_admit=min_admit)
         self._rid = itertools.count()
         self._key_cache: dict[int, np.ndarray] = {}
-        self._ttft: list[float] = []
-        self._tpot: list[float] = []
+        # counters/latency histograms live in the obs.metrics registry
+        # under a per-engine scope; serve_stats() is a view over them,
+        # and metrics.reset() clears them via the registered hook
+        scope = f"serve.e{next(_ENGINE_IDS)}."
+        self._ttft = _metrics.histogram(scope + "ttft_s")
+        self._tpot = _metrics.histogram(scope + "tpot_s")
         self._counters = {
-            "prefill_steps": 0,
-            "decode_steps": 0,
-            "slot_steps_total": 0,
-            "slot_steps_active": 0,
-            "tokens_generated": 0,
+            name: _metrics.counter(scope + name) for name in _COUNTER_NAMES
         }
+        _metrics.on_reset(self.reset_stats)
 
         self._carry = {
             "state": init_decode_state(cfg, slots, max_seq, dtype=state_dtype),
@@ -352,21 +366,25 @@ class ContinuousBatchingEngine:
             keys[s] = self._seed_key(req.seed)
             eos[s] = _NO_EOS if req.eos_id is None else req.eos_id
         t0 = self.clock()
-        self._carry, packed = self._admit_fn(
-            self.params, self._carry, ptoks, plens, mask, budget, temps,
-            keys, eos,
-        )
-        packed = np.asarray(packed)  # one sync
+        with _trace.span("serve.prefill", rows=len(plan), pad=P):
+            self._carry, packed = self._admit_fn(
+                self.params, self._carry, ptoks, plens, mask, budget, temps,
+                keys, eos,
+            )
+            packed = np.asarray(packed)  # one sync
         first, done0 = packed[0], packed[1].astype(bool)
         t1 = self.clock()
-        self._counters["prefill_steps"] += 1
+        self._counters["prefill_steps"].inc()
         for s, req in plan:
             self.sched.admit(s, req)
             req.admit_t = t0
             req.first_token_t = t1
             req.tokens.append(int(first[s]))
-            self._counters["tokens_generated"] += 1
-            self._ttft.append(t1 - req.arrival_t)
+            self._counters["tokens_generated"].inc()
+            self._ttft.observe(t1 - req.arrival_t)
+            if _trace.enabled:
+                _trace.instant("serve.ttft", rid=req.rid, slot=s,
+                               ttft_ms=(t1 - req.arrival_t) * 1e3)
             if done0[s]:
                 req.finish_t = t1
                 finished.append(self.sched.retire(s))
@@ -381,9 +399,12 @@ class ContinuousBatchingEngine:
 
     def _do_decode(self, finished):
         t0 = self.clock()
-        self._carry, packed = self._decode_fn(self.params, self._carry)
-        packed = np.asarray(packed)  # one sync
-        tok, was, done = packed[0], packed[1].astype(bool), packed[2].astype(bool)
+        with _trace.span("serve.decode", slots=self.slots) as sp:
+            self._carry, packed = self._decode_fn(self.params, self._carry)
+            packed = np.asarray(packed)  # one sync
+            tok, was, done = (packed[0], packed[1].astype(bool),
+                              packed[2].astype(bool))
+            sp.set(active=int(was.sum()))
         t1 = self.clock()
         n_active = 0
         for s in range(self.slots):
@@ -392,15 +413,15 @@ class ContinuousBatchingEngine:
             n_active += 1
             req = self.sched.slots[s]
             req.tokens.append(int(tok[s]))
-            self._counters["tokens_generated"] += 1
+            self._counters["tokens_generated"].inc()
             if done[s]:
                 req.finish_t = t1
                 finished.append(self.sched.retire(s))
-        self._counters["decode_steps"] += 1
-        self._counters["slot_steps_total"] += self.slots
-        self._counters["slot_steps_active"] += n_active
+        self._counters["decode_steps"].inc()
+        self._counters["slot_steps_total"].inc(self.slots)
+        self._counters["slot_steps_active"].inc(n_active)
         if n_active:
-            self._tpot.append((t1 - t0) / n_active)
+            self._tpot.observe((t1 - t0) / n_active)
 
     def step(self) -> list[Request]:
         """One engine step: admission prefill (if warranted) then one
@@ -408,6 +429,9 @@ class ContinuousBatchingEngine:
         finished: list[Request] = []
         plan = self.sched.plan_admissions()
         if plan:
+            if _trace.enabled:
+                _trace.instant("serve.admit_group", rows=len(plan),
+                               queued=len(self.sched.queue))
             self._do_admit(plan, finished)
         if self.sched.active_slots():
             self._do_decode(finished)
@@ -421,22 +445,27 @@ class ContinuousBatchingEngine:
         return out
 
     def reset_stats(self) -> None:
-        """Zero counters and latency histograms (e.g. after a warm-up
-        request has triggered compilation); live slots are untouched."""
-        self._ttft.clear()
-        self._tpot.clear()
-        for k in self._counters:
-            self._counters[k] = 0
+        """Zero this engine's counters and latency histograms (e.g.
+        after a warm-up request has triggered compilation); live slots
+        are untouched.  Also runs as an ``obs.metrics.reset()`` hook so
+        one registry-wide reset clears engine state too."""
+        self._ttft.reset()
+        self._tpot.reset()
+        for c in self._counters.values():
+            c.reset()
         for k in self.sched.counters:
             self.sched.counters[k] = 0
 
     def serve_stats(self) -> dict:
-        """Counters + latency summaries for the run so far."""
+        """Counters + latency summaries for the run so far — a view
+        over this engine's scope in the ``repro.obs.metrics`` registry
+        (plus the scheduler's admission counters)."""
         stats = dict(self.sched.counters)
-        stats.update(self._counters)
+        stats.update({k: c.value for k, c in self._counters.items()})
         total = max(1, stats["slot_steps_total"])
         stats["padded_slot_waste"] = 1.0 - stats["slot_steps_active"] / total
-        for name, xs in (("ttft", self._ttft), ("tpot", self._tpot)):
+        for name, h in (("ttft", self._ttft), ("tpot", self._tpot)):
+            xs = h.samples()
             if xs:
                 stats[f"{name}_p50_ms"] = float(np.percentile(xs, 50) * 1e3)
                 stats[f"{name}_p95_ms"] = float(np.percentile(xs, 95) * 1e3)
