@@ -44,8 +44,10 @@ from .context import (
     init,
     land_into,
     recv_timeout,
+    run_epoch,
     set_context,
 )
+from .faultinject import FaultPlan, instrument_faults
 from .filempi import FileMPI
 from .hiercomm import HierComm
 from .shmcomm import ShmComm
@@ -64,7 +66,10 @@ __all__ = [
     "RecvIntoRequest",
     "Request",
     "StragglerTimeout",
+    "FaultPlan",
+    "instrument_faults",
     "land_into",
+    "run_epoch",
     "ctx_counter",
     "group_of",
     "world_group",

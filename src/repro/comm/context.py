@@ -71,6 +71,7 @@ __all__ = [
     "set_context",
     "init",
     "recv_timeout",
+    "run_epoch",
     "Np",
     "Pid",
 ]
@@ -82,6 +83,17 @@ def recv_timeout() -> float:
     tests can tune it per run (pRUN exports it to workers, a test can
     monkeypatch it) without re-importing the comm stack."""
     return float(os.environ.get("PPYTHON_RECV_TIMEOUT", "300"))
+
+
+def run_epoch() -> int:
+    """This process's world generation (``PPYTHON_EPOCH``, default 0).
+
+    pRUN bumps it on every gang restart; transports stamp it into their
+    bootstrap artifacts (rendezvous registrations, socket HELLOs, shm
+    arena headers, file-message names) so a survivor or ghost of an
+    earlier generation can never be mistaken for a member of the current
+    one."""
+    return int(os.environ.get("PPYTHON_EPOCH", "0") or 0)
 
 
 CTX_COUNTER_WINDOW = 1024
@@ -239,6 +251,27 @@ class CommContext:
 
     np_: int
     pid: int
+    # world generation this context was built in (pRUN bumps it per gang
+    # restart); process transports override with the live env value
+    epoch: int = 0
+
+    # -- liveness contract (see comm/liveness.py) -----------------------------
+
+    def dead_ranks(self) -> list[int]:
+        """Peers this rank has evidence are gone.  The base contract is
+        honest ignorance: transports without peer visibility return []."""
+        return []
+
+    def pending_snapshot(self, limit: int = 8) -> list:
+        """Arrived-but-unclaimed (src, tag, seq) matches, bounded."""
+        return []
+
+    def epoch_reset(self, peer: int, epoch: int | None = None) -> None:
+        """Drop all per-``peer`` stream state at a generation boundary
+        (seq counters, cached connections/arenas, unclaimed matches).
+        No-op for transports without cross-process stream state."""
+        if epoch is not None:
+            self.epoch = int(epoch)
 
     # -- required primitives -------------------------------------------------
 
@@ -479,7 +512,12 @@ def init(ctx: CommContext | None = None) -> CommContext:
     # no-op unless PPYTHON_TRACE=1: wraps p2p entry points with spans
     from ..obs.trace import instrument_context
 
-    _global_ctx = instrument_context(ctx)
+    ctx = instrument_context(ctx)
+    # no-op unless PPYTHON_FAULT arms a fault for this (rank, epoch);
+    # outermost so an armed kill fires before the transport is entered
+    from .faultinject import instrument_faults
+
+    _global_ctx = instrument_faults(ctx)
     return _global_ctx
 
 

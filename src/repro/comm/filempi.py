@@ -39,7 +39,9 @@ from .context import (
     StragglerTimeout,
     land_into as _land_into,
     recv_timeout,
+    run_epoch,
 )
+from .liveness import SNAPSHOT_LIMIT, straggler_message
 from .frame import (
     FLAG_CHUNKED as _FLAG_CHUNKED,
     ChunkHeader as _ChunkHeader,
@@ -97,11 +99,13 @@ class _FileRecvRequest(Request):
         pause = _POLL_MIN
         while not self.test():
             if time.monotonic() > deadline:
-                dead = self._ctx.dead_ranks()
                 raise StragglerTimeout(
-                    f"rank {self._ctx.pid} timed out receiving {self._tag!r} "
-                    f"(seq {self._seq}) from rank {self._source}; "
-                    f"stale-heartbeat ranks: {dead}"
+                    straggler_message(
+                        self._ctx,
+                        f"{self._tag!r} (seq {self._seq}) from rank "
+                        f"{self._source}",
+                        "the shared directory",
+                    )
                 )
             time.sleep(pause)
             pause = min(pause * 2, _POLL_MAX)
@@ -129,11 +133,16 @@ class _FileRecvIntoRequest(_FileRecvRequest):
 
 class FileMPI(CommContext):
     def __init__(self, np_: int, pid: int, comm_dir: str | os.PathLike,
-                 heartbeat: bool = True):
+                 heartbeat: bool = True, epoch: int | None = None):
         if not (0 <= pid < np_):
             raise ValueError(f"pid {pid} out of range for np={np_}")
         self.np_ = np_
         self.pid = pid
+        self.epoch = run_epoch() if epoch is None else int(epoch)
+        # epoch > 0 tokens every message filename: a gang-restarted world
+        # sharing the comm dir can never claim a dead generation's
+        # residue (epoch 0 keeps the paper's plain layout)
+        self._etok = f"E{self.epoch}_" if self.epoch > 0 else ""
         self.dir = Path(comm_dir)
         self.dir.mkdir(parents=True, exist_ok=True)
         self._send_seq: dict[tuple[int, str], int] = {}
@@ -151,7 +160,9 @@ class FileMPI(CommContext):
     # -- point to point -------------------------------------------------------
 
     def _msg_path(self, src: int, dst: int, tag: Any, seq: int) -> Path:
-        return self.dir / f"m_s{src}_d{dst}_q{seq}_{_tag_token(tag)}.buf"
+        return self.dir / (
+            f"m_s{src}_d{dst}_q{seq}_{self._etok}{_tag_token(tag)}.buf"
+        )
 
     def _publish(self, final: Path, parts: list) -> None:
         """Write ``parts`` to a temp file, fsync once, atomically rename."""
@@ -265,10 +276,11 @@ class FileMPI(CommContext):
                 self._recv_seq[key] = seq + 1  # commit only after the claim
                 return obj
             if time.monotonic() > deadline:
-                dead = self.dead_ranks()
                 raise StragglerTimeout(
-                    f"rank {self.pid} timed out receiving {tag!r} (seq {seq}) "
-                    f"from rank {source}; stale-heartbeat ranks: {dead}"
+                    straggler_message(
+                        self, f"{tag!r} (seq {seq}) from rank {source}",
+                        "the shared directory",
+                    )
                 )
             time.sleep(pause)
             pause = min(pause * 2, _POLL_MAX)
@@ -381,7 +393,9 @@ class FileMPI(CommContext):
         key = ("__bc", _tag_token(tag))
         seq = self._send_seq.get(key, 0)
         self._send_seq[key] = seq + 1
-        payload = self.dir / f"bc_r{root}_q{seq}_{_tag_token(tag)}.buf"
+        payload = self.dir / (
+            f"bc_r{root}_q{seq}_{self._etok}{_tag_token(tag)}.buf"
+        )
         if self.pid == root:
             self._publish(payload, _encode_frame(obj))
             return obj
@@ -438,6 +452,27 @@ class FileMPI(CommContext):
             except FileNotFoundError:
                 dead.append(pid)
         return dead
+
+    def pending_snapshot(self, limit: int = SNAPSHOT_LIMIT) -> list:
+        """Arrived-but-unclaimed inbound message files, bounded — the
+        on-disk matching table the paper advertises as its debugging
+        affordance, surfaced through the liveness contract."""
+        names = sorted(
+            p.name for p in self.dir.glob(f"m_*_d{self.pid}_*.buf")
+        )
+        return names[:limit]
+
+    def epoch_reset(self, peer: int, epoch: int | None = None) -> None:
+        """Reset per-``peer`` stream state at an epoch boundary.  On-disk
+        residue needs no sweep: epoch-tokened filenames already fence a
+        dead generation's messages out of the new one's matching."""
+        if epoch is not None:
+            self.epoch = int(epoch)
+            self._etok = f"E{self.epoch}_" if self.epoch > 0 else ""
+        for k in [k for k in self._send_seq if k[0] == peer]:
+            del self._send_seq[k]
+        for k in [k for k in self._recv_seq if k[0] == peer]:
+            del self._recv_seq[k]
 
     def finalize(self) -> None:
         self._hb_stop.set()

@@ -38,7 +38,8 @@ from typing import Any
 
 import numpy as np
 
-from .context import CommContext, Request
+from .context import CommContext, Request, run_epoch
+from .liveness import SNAPSHOT_LIMIT
 from .rendezvous import advertised_host, bind_listener, exchange_endpoints
 from .shmcomm import ShmComm
 from .socketcomm import SocketComm
@@ -79,7 +80,7 @@ class HierComm(CommContext):
 
     def __init__(self, np_: int, pid: int, endpoints, listener, node_ids,
                  shm_dir: str | os.PathLike, arena_bytes: int | None = None,
-                 nonce: str | None = None):
+                 nonce: str | None = None, epoch: int | None = None):
         if not (0 <= pid < np_):
             raise ValueError(f"pid {pid} out of range for np={np_}")
         if len(node_ids) != np_:
@@ -88,6 +89,7 @@ class HierComm(CommContext):
             )
         self.np_ = np_
         self.pid = pid
+        self.epoch = run_epoch() if epoch is None else int(epoch)
         self.node_ids = tuple(int(n) for n in node_ids)
         self.node_id = self.node_ids[pid]
         self.node_peers = tuple(
@@ -98,12 +100,14 @@ class HierComm(CommContext):
         same_node_senders = [r for r in self.node_peers if r != pid]
         try:
             self._shm = ShmComm(np_, pid, shm_dir, arena_bytes=arena_bytes,
-                                nonce=nonce, senders=same_node_senders)
+                                nonce=nonce, senders=same_node_senders,
+                                epoch=self.epoch)
         except BaseException:
             listener.close()
             raise
         try:
-            self._sock = SocketComm(np_, pid, endpoints, listener)
+            self._sock = SocketComm(np_, pid, endpoints, listener,
+                                    epoch=self.epoch)
         except BaseException:
             self._shm.finalize()
             raise
@@ -195,6 +199,32 @@ class HierComm(CommContext):
 
     def probe(self, source: int, tag: Any) -> bool:
         return self._fab(source)[0].probe(source, tag)
+
+    # -- elastic restart -------------------------------------------------------
+
+    def dead_ranks(self) -> list[int]:
+        """Union of both fabrics' dead-peer evidence, filtered to the
+        peers each fabric actually carries (liveness contract)."""
+        dead = set()
+        for peer in self._shm.dead_ranks():
+            if self.fabric_of(peer) == "shm":
+                dead.add(peer)
+        for peer in self._sock.dead_ranks():
+            if self.fabric_of(peer) == "tcp":
+                dead.add(peer)
+        return sorted(dead)
+
+    def pending_snapshot(self, limit: int = SNAPSHOT_LIMIT) -> list:
+        merged = (list(self._shm.pending_snapshot(limit))
+                  + list(self._sock.pending_snapshot(limit)))
+        return sorted(merged, key=str)[:limit]
+
+    def epoch_reset(self, peer: int, epoch: int | None = None) -> None:
+        """Delegate the epoch-boundary stream reset to the fabric that
+        owns the (self, peer) pair."""
+        if epoch is not None:
+            self.epoch = int(epoch)
+        self._fab(peer)[0].epoch_reset(peer, epoch=epoch)
 
     def finalize(self) -> None:
         try:

@@ -20,6 +20,16 @@ bootstrap protocol with two interchangeable backends:
 
 Both backends return the same rank-ordered endpoint list, and neither is
 on any message path — after bootstrap the rendezvous machinery is gone.
+
+**Epoch fencing (elastic restart).**  Every registration carries the
+rank's world generation (``PPYTHON_EPOCH``, bumped by pRUN on each gang
+restart).  A server serving generation *g* drops registrations from any
+other generation — a ghost of a dead generation can never complete a
+fresh table, and a fresh rank can never be served a dead generation's
+endpoints.  ``serve_generations`` keeps one listener serving successive
+generations for the lifetime of a job (the pRUN launcher's mode), so a
+restarted world re-registers fresh endpoints under its bumped epoch
+without any port churn.
 """
 
 from __future__ import annotations
@@ -31,7 +41,7 @@ import struct
 import time
 from pathlib import Path
 
-from .context import StragglerTimeout, recv_timeout
+from .context import StragglerTimeout, recv_timeout, run_epoch
 
 __all__ = [
     "advertised_host",
@@ -41,6 +51,7 @@ __all__ = [
     "rendezvous_file",
     "rendezvous_tcp",
     "serve_endpoint_table",
+    "serve_generations",
 ]
 
 _LEN = struct.Struct("<I")
@@ -108,15 +119,31 @@ def _recv_exact(sock: socket.socket, n: int) -> bytes:
     return bytes(buf)
 
 
+def _parse_registration(rec) -> tuple[int, int, tuple]:
+    """``(pid, epoch, endpoint)`` from a registration record; the legacy
+    two-field form ``(pid, endpoint)`` is read as epoch 0."""
+    if len(rec) == 2:
+        peer, ep = rec
+        return int(peer), 0, tuple(ep)
+    peer, epoch, ep = rec
+    return int(peer), int(epoch), tuple(ep)
+
+
 def serve_endpoint_table(
     srv: socket.socket,
     np_: int,
     deadline: float,
     table: list | None = None,
+    epoch: int = 0,
 ) -> list[tuple[str, int]]:
     """Serve one endpoint exchange on the already-bound listener ``srv``:
     accept one registration record per rank, then send every connection
     the completed table.  Closes ``srv`` when done.
+
+    Registrations from any generation other than ``epoch`` are dropped
+    (the connection is closed; a live same-generation rank redials and
+    re-registers) — a ghost of a dead generation can neither join nor
+    stall the current one.
 
     Runs inside rank 0 (the ``PPYTHON_RDZV_ADDR`` flow) or on a launcher
     thread (pRUN binds port 0 itself and serves, so the advertised port
@@ -145,9 +172,13 @@ def serve_endpoint_table(
             # healthy rank redials and re-registers
             conn.settimeout(min(2.0, max(0.5, deadline - time.monotonic())))
             try:
-                peer, ep = _recv_rec(conn)
-            except (socket.timeout, ConnectionError, OSError):
+                peer, rec_epoch, ep = _parse_registration(_recv_rec(conn))
+            except (socket.timeout, ConnectionError, OSError, ValueError,
+                    TypeError):
                 conn.close()
+                continue
+            if rec_epoch != epoch:
+                conn.close()  # stale-generation ghost (or too-new rank)
                 continue
             table[peer] = tuple(ep)
             conns.append(conn)
@@ -160,6 +191,77 @@ def serve_endpoint_table(
         srv.close()
 
 
+def serve_generations(srv: socket.socket, np_: int, deadline: float) -> None:
+    """Serve endpoint exchanges for *successive generations* on one
+    listener — the pRUN launcher's mode under ``restarts > 0``.
+
+    Registrations are collected into per-epoch tables; the moment a
+    generation's table completes, it is flushed to that generation's
+    registrants and cached (a rank whose table read raced a drop redials
+    and is answered from the cache).  A ghost registering under a dead
+    epoch sits in a forever-incomplete table and is never answered —
+    exactly the fence the restart design needs.  Returns when ``srv`` is
+    closed; raises ``StragglerTimeout`` if any generation is still
+    incomplete at ``deadline``."""
+    srv.settimeout(0.5)
+    tables: dict[int, list] = {}
+    waiting: dict[int, list[socket.socket]] = {}
+    done: dict[int, list] = {}
+    try:
+        while True:
+            if time.monotonic() > deadline and tables:
+                parts = []
+                for e, t in sorted(tables.items()):
+                    missing = [r for r, ep in enumerate(t) if ep is None]
+                    parts.append(f"epoch {e} missing ranks {missing}")
+                raise StragglerTimeout(
+                    "rendezvous server timed out with incomplete "
+                    "generations: " + "; ".join(parts)
+                )
+            try:
+                conn, _ = srv.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return  # listener closed: the job is over
+            conn.settimeout(min(2.0, max(0.5, deadline - time.monotonic())))
+            try:
+                peer, epoch, ep = _parse_registration(_recv_rec(conn))
+            except (socket.timeout, ConnectionError, OSError, ValueError,
+                    TypeError):
+                conn.close()
+                continue
+            if epoch in done:
+                try:
+                    _send_rec(conn, done[epoch])
+                except OSError:
+                    pass
+                conn.close()
+                continue
+            table = tables.setdefault(epoch, [None] * np_)
+            if not (0 <= peer < np_):
+                conn.close()
+                continue
+            table[peer] = tuple(ep)
+            waiting.setdefault(epoch, []).append(conn)
+            if sum(e is not None for e in table) == np_:
+                for c in waiting.pop(epoch, []):
+                    try:
+                        _send_rec(c, table)
+                    except OSError:
+                        pass
+                    c.close()
+                done[epoch] = tables.pop(epoch)
+    finally:
+        for conns in waiting.values():
+            for c in conns:
+                c.close()
+        try:
+            srv.close()
+        except OSError:
+            pass
+
+
 def rendezvous_tcp(
     np_: int,
     pid: int,
@@ -167,6 +269,7 @@ def rendezvous_tcp(
     addr: str,
     timeout: float | None = None,
     external_server: bool | None = None,
+    epoch: int | None = None,
 ) -> list[tuple[str, int]]:
     """Exchange endpoints through a TCP rendezvous server at ``addr``;
     returns the rank-ordered ``(host, port)`` table.
@@ -174,10 +277,15 @@ def rendezvous_tcp(
     By default rank 0 binds ``addr`` and serves the exchange.  With
     ``external_server`` (or ``PPYTHON_RDZV_EXTERNAL=1``) the server
     already runs elsewhere — e.g. on the pRUN launcher's thread — and
-    every rank, including 0, registers as a client."""
+    every rank, including 0, registers as a client.  Registrations carry
+    ``epoch`` (default: this process's ``PPYTHON_EPOCH``); the server
+    drops other-generation registrations, and a dropped client redials —
+    so a ghost can neither join nor be served the current table."""
     limit = recv_timeout() if timeout is None else timeout
     deadline = time.monotonic() + limit
     host, port = parse_addr(addr)
+    if epoch is None:
+        epoch = run_epoch()
     if external_server is None:
         external_server = bool(os.environ.get("PPYTHON_RDZV_EXTERNAL"))
     if pid == 0 and not external_server:
@@ -192,16 +300,16 @@ def rendezvous_tcp(
         srv.listen(np_)
         table: list = [None] * np_
         table[0] = tuple(endpoint)
-        return serve_endpoint_table(srv, np_, deadline, table)
+        return serve_endpoint_table(srv, np_, deadline, table, epoch=epoch)
     # client: dial + register with retry (the server may still be
     # starting, and it drops connections whose registration read timed
-    # out — redialing re-registers)
+    # out or whose epoch mismatched — redialing re-registers)
     while True:
         sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         try:
             sock.settimeout(max(0.5, deadline - time.monotonic()))
             sock.connect((host, port))
-            _send_rec(sock, (pid, tuple(endpoint)))
+            _send_rec(sock, (pid, epoch, tuple(endpoint)))
             sock.settimeout(max(0.5, deadline - time.monotonic()))
             table = _recv_rec(sock)
             break
@@ -209,7 +317,7 @@ def rendezvous_tcp(
             if time.monotonic() > deadline:
                 raise StragglerTimeout(
                     f"rank {pid} could not complete the rendezvous with "
-                    f"{addr} within {limit:.0f}s"
+                    f"{addr} within {limit:.0f}s (epoch {epoch})"
                 ) from None
             time.sleep(_CONNECT_RETRY)
         finally:
@@ -223,6 +331,7 @@ def rendezvous_file(
     endpoint: tuple[str, int],
     rdzv_dir: str | os.PathLike,
     timeout: float | None = None,
+    epoch: int | None = None,
 ) -> list[tuple[str, int]]:
     """One-time endpoint exchange through a shared directory: publish
     ``ep_<pid>`` atomically, poll until all ``np`` are present.
@@ -230,11 +339,18 @@ def rendezvous_file(
     After reading the table each rank drops a ``rdzv_done_<pid>`` marker;
     rank 0 reclaims every exchange file once all markers exist (bounded
     best-effort), so reusing the directory for a later run can never
-    serve that run a stale endpoint table."""
+    serve that run a stale endpoint table.  Under elastic restart the
+    filenames carry an ``E<epoch>_`` token (epoch > 0 only, so epoch-0
+    layouts are unchanged): a relaunched generation exchanges through
+    fresh names and can never read a dead generation's endpoints, even
+    when rank 0 died before reclaiming them."""
     limit = recv_timeout() if timeout is None else timeout
+    if epoch is None:
+        epoch = run_epoch()
+    etok = f"E{epoch}_" if epoch > 0 else ""
     d = Path(rdzv_dir)
     d.mkdir(parents=True, exist_ok=True)
-    mine = d / f"ep_{pid}"
+    mine = d / f"{etok}ep_{pid}"
     tmp = mine.with_suffix(f".tmp{os.getpid()}")
     with open(tmp, "wb") as f:
         pickle.dump(tuple(endpoint), f, protocol=5)
@@ -245,7 +361,7 @@ def rendezvous_file(
     pause = 0.001
     table = None
     while table is None:
-        paths = [d / f"ep_{r}" for r in range(np_)]
+        paths = [d / f"{etok}ep_{r}" for r in range(np_)]
         if all(p.exists() for p in paths):
             table = []
             for p in paths:
@@ -253,7 +369,8 @@ def rendezvous_file(
                     table.append(tuple(pickle.load(f)))
             break
         if time.monotonic() > deadline:
-            missing = [r for r in range(np_) if not (d / f"ep_{r}").exists()]
+            missing = [r for r in range(np_)
+                       if not (d / f"{etok}ep_{r}").exists()]
             raise StragglerTimeout(
                 f"rank {pid} timed out in file rendezvous {d}; "
                 f"missing ranks: {missing}"
@@ -263,15 +380,15 @@ def rendezvous_file(
     # a rank marks done only after its table is in hand, and rank 0
     # deletes only after every marker exists — no reader can lose a file
     # it still needs
-    (d / f"rdzv_done_{pid}").touch()
+    (d / f"{etok}rdzv_done_{pid}").touch()
     if pid == 0:
         reclaim_by = min(deadline, time.monotonic() + 10.0)
-        markers = [d / f"rdzv_done_{r}" for r in range(np_)]
+        markers = [d / f"{etok}rdzv_done_{r}" for r in range(np_)]
         while not all(m.exists() for m in markers):
             if time.monotonic() > reclaim_by:
                 return table  # a peer died post-exchange: leave evidence
             time.sleep(0.01)
-        for p in markers + [d / f"ep_{r}" for r in range(np_)]:
+        for p in markers + [d / f"{etok}ep_{r}" for r in range(np_)]:
             try:
                 os.unlink(p)
             except FileNotFoundError:
@@ -287,16 +404,19 @@ def exchange_endpoints(
     addr: str | None = None,
     rdzv_dir: str | os.PathLike | None = None,
     timeout: float | None = None,
+    epoch: int | None = None,
 ) -> list[tuple[str, int]]:
     """Backend dispatch: explicit args first, then ``PPYTHON_RDZV_ADDR``,
     then ``PPYTHON_RDZV_DIR``/``PPYTHON_COMM_DIR`` as the file fallback."""
     addr = addr or os.environ.get("PPYTHON_RDZV_ADDR")
     if addr:
-        return rendezvous_tcp(np_, pid, endpoint, addr, timeout=timeout)
+        return rendezvous_tcp(np_, pid, endpoint, addr, timeout=timeout,
+                              epoch=epoch)
     rdzv_dir = (rdzv_dir or os.environ.get("PPYTHON_RDZV_DIR")
                 or os.environ.get("PPYTHON_COMM_DIR"))
     if rdzv_dir:
-        return rendezvous_file(np_, pid, endpoint, rdzv_dir, timeout=timeout)
+        return rendezvous_file(np_, pid, endpoint, rdzv_dir, timeout=timeout,
+                               epoch=epoch)
     raise ValueError(
         "socket transport needs a rendezvous: set PPYTHON_RDZV_ADDR "
         "(host:port TCP bootstrap, no shared filesystem needed) or "

@@ -87,12 +87,14 @@ from typing import Any
 
 import numpy as np
 
+from ..obs import metrics as _metrics
 from .context import (
     CommContext,
     Request,
     StragglerTimeout,
     land_into as _land_into,
     recv_timeout,
+    run_epoch,
 )
 from .frame import (
     chunk_windows,
@@ -101,23 +103,33 @@ from .frame import (
     max_msg_bytes,
     tag_token,
 )
+from .liveness import SNAPSHOT_LIMIT, straggler_message
 
 __all__ = ["ShmComm", "arena_paths", "default_arena_bytes"]
 
-# Arena header: magic, capacity, run-nonce, the two seqlock cursor
-# pairs, then the consumer's parked flag.  Cursors are monotonically
-# increasing byte counts (they never wrap; only offsets into the data
-# region do), published value-then-check so a reader retries a torn
-# 8-byte load instead of acting on it.
-_ARENA_HDR = struct.Struct("<8sQQQQQQ")  # magic, cap, nonce, h, h2, t, t2
-_ARENA_MAGIC = b"PPSHMA1\0"
-_DATA_OFF = 64
-_OFF_HEAD = 24   # byte offsets of the cursor fields within the header
-_OFF_HEAD2 = 32
-_OFF_TAIL = 40
-_OFF_TAIL2 = 48
-_OFF_PARKED = 56  # 1 byte: consumer is parked on its doorbell
+# Arena header v2: magic, capacity, run-nonce, epoch — then (at fixed
+# offsets) the two seqlock cursor pairs, the consumer's parked flag, and
+# the owner's heartbeat word.  Cursors are monotonically increasing byte
+# counts (they never wrap; only offsets into the data region do),
+# published value-then-check so a reader retries a torn 8-byte load
+# instead of acting on it.  The epoch field fences elastic restarts: a
+# restarted owner recreates its arenas under a bumped epoch, and a
+# survivor confirms a replacement by seeing same-nonce + higher on-disk
+# epoch (structurally no false positives — a paused-but-alive owner's
+# file keeps its old epoch).  The heartbeat word is a little-endian f64
+# wall-clock stamp the owner's beat thread bumps; its staleness is the
+# cheap first-stage liveness probe that gates the disk header read.
+_ARENA_HDR = struct.Struct("<8sQQQ")  # magic, cap, nonce, epoch
+_ARENA_MAGIC = b"PPSHMA2\0"
+_DATA_OFF = 128
+_OFF_HEAD = 32   # byte offsets of the cursor fields within the header
+_OFF_HEAD2 = 40
+_OFF_TAIL = 48
+_OFF_TAIL2 = 56
+_OFF_PARKED = 64  # 1 byte: consumer is parked on its doorbell
+_OFF_HBEAT = 72   # f64 wall-clock heartbeat stamp, owner-written
 _U64 = struct.Struct("<Q")
+_F64 = struct.Struct("<d")
 
 # Record header (mirrors SocketComm's wire record): magic, kind, tag
 # token length, seq, head length, nbuf — followed by nbuf u64 buffer
@@ -130,11 +142,23 @@ _CHUNK_META = struct.Struct("<QQ")
 
 DEFAULT_ARENA_BYTES = 4 << 20
 _ATTACH_RETRY = 0.005
+_STALE_CHECK_PERIOD = 0.05   # how often a blocked sender re-probes liveness
+DEFAULT_HEARTBEAT_PERIOD = 1.0
 _SPIN_SECONDS = 0.002    # yield-spin window before a poll starts parking
 _PARK_MIN = 0.0005       # first parked wait (cross-process poll floor)
 _PARK_MAX = 0.05         # idle ceiling (same as FileMPI's poll cap)
 
 _MISSING = object()
+
+
+class _PeerRestarted(Exception):
+    """A blocked send's target arena was replaced under a bumped epoch:
+    the owner died and its restarted incarnation recreated the ring.
+    ``send`` catches this, re-attaches, resets the stream, and retries."""
+
+    def __init__(self, dest: int):
+        super().__init__(f"peer {dest} restarted (arena epoch bumped)")
+        self.dest = dest
 
 
 def _spin_window(np_: int) -> float:
@@ -194,31 +218,37 @@ class _Arena:
     their owning side, so only the *foreign* cursor is ever seqlock-read.
     """
 
-    def __init__(self, path: Path, mm: mmap.mmap, cap: int):
+    def __init__(self, path: Path, mm: mmap.mmap, cap: int, epoch: int = 0):
         self.path = path
         self._mm = mm
         self._mv = memoryview(mm)
         self._data = self._mv[_DATA_OFF : _DATA_OFF + cap]
         self.cap = cap
+        self.epoch = epoch
         self.head = self._read_cursor(_OFF_HEAD, _OFF_HEAD2)
         self.tail = self._read_cursor(_OFF_TAIL, _OFF_TAIL2)
 
     # -- construction --------------------------------------------------------
 
     @classmethod
-    def create(cls, path: Path, cap: int, nonce: int) -> "_Arena":
+    def create(cls, path: Path, cap: int, nonce: int,
+               epoch: int = 0) -> "_Arena":
         tmp = path.with_suffix(f".tmp{os.getpid()}_{threading.get_ident()}")
         with open(tmp, "wb") as f:
-            f.write(_ARENA_HDR.pack(_ARENA_MAGIC, cap, nonce, 0, 0, 0, 0))
+            f.write(_ARENA_HDR.pack(_ARENA_MAGIC, cap, nonce, epoch))
             f.write(b"\0" * (_DATA_OFF - _ARENA_HDR.size))
             f.truncate(_DATA_OFF + cap)
         os.rename(tmp, path)  # atomic publish: attachers see a whole header
-        return cls._map(path, cap)
+        arena = cls._map(path, cap, epoch)
+        arena.beat()  # the heartbeat is live from birth, never zero
+        return arena
 
     @classmethod
-    def attach(cls, path: Path, nonce: int) -> "_Arena | None":
+    def attach(cls, path: Path, nonce: int,
+               min_epoch: int = 0) -> "_Arena | None":
         """Producer-side attach; None if the file is missing, not an
-        arena, or belongs to a different run (stale directory reuse)."""
+        arena, belongs to a different run (stale directory reuse), or
+        predates ``min_epoch`` (a dead generation's leftover)."""
         try:
             with open(path, "rb") as f:
                 hdr = f.read(_ARENA_HDR.size)
@@ -226,19 +256,21 @@ class _Arena:
             return None
         if len(hdr) != _ARENA_HDR.size:
             return None
-        magic, cap, file_nonce = _ARENA_HDR.unpack(hdr)[:3]
+        magic, cap, file_nonce, epoch = _ARENA_HDR.unpack(hdr)
         if magic != _ARENA_MAGIC or file_nonce != nonce:
             return None
+        if epoch < min_epoch:
+            return None
         try:
-            return cls._map(path, cap)
+            return cls._map(path, cap, epoch)
         except (OSError, ValueError):
             return None
 
     @classmethod
-    def _map(cls, path: Path, cap: int) -> "_Arena":
+    def _map(cls, path: Path, cap: int, epoch: int = 0) -> "_Arena":
         with open(path, "r+b") as f:
             mm = mmap.mmap(f.fileno(), _DATA_OFF + cap)
-        return cls(path, mm, cap)
+        return cls(path, mm, cap, epoch)
 
     def close(self) -> None:
         try:
@@ -284,6 +316,16 @@ class _Arena:
 
     def consumer_parked(self) -> bool:
         return self._mv[_OFF_PARKED] != 0
+
+    # the heartbeat word is owner-written, peer-read; a torn f64 read is
+    # harmless (it feeds an age threshold, and the next read self-heals)
+
+    def beat(self, now: float | None = None) -> None:
+        _F64.pack_into(self._mv, _OFF_HBEAT, time.time() if now is None
+                       else now)
+
+    def heartbeat(self) -> float:
+        return _F64.unpack_from(self._mv, _OFF_HBEAT)[0]
 
     # -- byte ring I/O (positions are monotonic counts; offsets wrap) --------
 
@@ -413,11 +455,14 @@ class ShmComm(CommContext):
 
     def __init__(self, np_: int, pid: int, shm_dir: str | os.PathLike,
                  arena_bytes: int | None = None, nonce: str | None = None,
-                 senders=None):
+                 senders=None, epoch: int | None = None,
+                 heartbeat: bool = True,
+                 heartbeat_period: float | None = None):
         if not (0 <= pid < np_):
             raise ValueError(f"pid {pid} out of range for np={np_}")
         self.np_ = np_
         self.pid = pid
+        self.epoch = run_epoch() if epoch is None else int(epoch)
         self.dir = Path(shm_dir)
         self.dir.mkdir(parents=True, exist_ok=True)
         if nonce is None:
@@ -452,7 +497,7 @@ class ShmComm(CommContext):
                 os.unlink(path)  # stale arena from a dead run: replace
             except FileNotFoundError:
                 pass
-            self._in[src] = _Arena.create(path, cap, self._nonce)
+            self._in[src] = _Arena.create(path, cap, self._nonce, self.epoch)
         self._out: dict[int, _Arena] = {}
         self._door_addrs: dict[int, str] = {}
         self._send_seq: dict[tuple[int, str], int] = {}
@@ -468,17 +513,46 @@ class ShmComm(CommContext):
         self._partial: dict[tuple, tuple[bytearray, list]] = {}
         self._recv_into_bufs: dict[tuple, np.ndarray] = {}
         self._closed = False
+        # liveness: this rank beats the heartbeat word in every inbound
+        # arena it owns; peers read it (mapped on their outbound side) as
+        # the cheap first-stage staleness probe.  ``PPYTHON_SHM_HEARTBEAT``
+        # tunes the period; 0 disables (tests do this to simulate death).
+        if heartbeat_period is None:
+            raw = os.environ.get("PPYTHON_SHM_HEARTBEAT", "")
+            heartbeat_period = float(raw) if raw else DEFAULT_HEARTBEAT_PERIOD
+        self._hb_period = heartbeat_period
+        self._hb_max_age = 4.0 * heartbeat_period if heartbeat_period else 4.0
+        self._hb_stop = threading.Event()
+        self._hb_thread: threading.Thread | None = None
+        if heartbeat and heartbeat_period > 0 and self._in:
+            self._hb_thread = threading.Thread(
+                target=self._beat_loop, name=f"ppshm-beat-{pid}", daemon=True
+            )
+            self._hb_thread.start()
+
+    def _beat_loop(self) -> None:
+        while not self._hb_stop.wait(self._hb_period):
+            now = time.time()
+            for arena in self._in.values():
+                try:
+                    arena.beat(now)
+                except ValueError:
+                    return  # views released: finalize() ran
 
     # -- send path ------------------------------------------------------------
 
-    def _arena_to(self, dest: int) -> _Arena:
+    def _arena_to(self, dest: int, min_epoch: int = 0) -> _Arena:
         arena = self._out.get(dest)
         if arena is not None:
-            return arena
+            if not self._arena_stale(arena):
+                return arena
+            arena = self._reattach(dest, arena)
+            if arena is not None:
+                return arena
         path = self.dir / f"arena_s{self.pid}_d{dest}.ring"
         deadline = time.monotonic() + recv_timeout()
         while True:
-            arena = _Arena.attach(path, self._nonce)
+            arena = _Arena.attach(path, self._nonce, min_epoch)
             if arena is not None:
                 self._out[dest] = arena
                 return arena
@@ -488,6 +562,46 @@ class ShmComm(CommContext):
                     f"at {path} (peer not initialized, or stale run dir)"
                 )
             time.sleep(_ATTACH_RETRY)
+
+    def _arena_stale(self, arena: _Arena) -> bool:
+        """True when ``arena``'s owner died *and was replaced*.
+
+        Two stages: the mapped heartbeat's age is the cheap gate (a live
+        owner beats every ``_hb_period``); only a stale heartbeat pays
+        the on-disk header read, and replacement is confirmed solely by
+        same-nonce + **higher epoch** on disk — a paused-but-alive
+        owner's file still carries the old epoch, so there are
+        structurally no false positives."""
+        try:
+            age = time.time() - arena.heartbeat()
+        except ValueError:
+            return True  # our mapping was closed under us
+        if age < self._hb_max_age:
+            return False
+        try:
+            with open(arena.path, "rb") as f:
+                hdr = f.read(_ARENA_HDR.size)
+        except OSError:
+            return False  # gone entirely: let the attach loop handle it
+        if len(hdr) != _ARENA_HDR.size:
+            return False
+        magic, _, file_nonce, file_epoch = _ARENA_HDR.unpack(hdr)
+        return (magic == _ARENA_MAGIC and file_nonce == self._nonce
+                and file_epoch > arena.epoch)
+
+    def _reattach(self, dest: int, old: _Arena) -> "_Arena | None":
+        """Swap to ``dest``'s recreated arena after its restart: unmap
+        the ghost, reset every per-peer stream (the restarted incarnation
+        sends and expects seq 0), and attach the bumped-epoch ring."""
+        min_epoch = old.epoch + 1
+        self._out.pop(dest, None)
+        old.close()
+        self.epoch_reset(dest)
+        arena = _Arena.attach(old.path, self._nonce, min_epoch)
+        if arena is not None:
+            self._out[dest] = arena
+            _metrics.counter("elastic.arena_reattach").inc()
+        return arena
 
     def _poke(self, dest: int) -> None:
         """Ring ``dest``'s doorbell (best-effort: a full or vanished
@@ -517,6 +631,7 @@ class ShmComm(CommContext):
         now = time.monotonic()
         deadline = now + recv_timeout()
         spin_until = now + self._spin
+        stale_check = now + _STALE_CHECK_PERIOD
         while arena.free() < total:
             # keep our own inbound rings draining while we wait for the
             # consumer to make room — two ranks flooding each other can
@@ -525,6 +640,13 @@ class ShmComm(CommContext):
             if arena.free() >= total:
                 break
             now = time.monotonic()
+            if now >= stale_check:
+                # a consumer that died mid-stream never frees ring space:
+                # probe for its restarted incarnation so the send can
+                # move to the fresh ring instead of timing out
+                stale_check = now + _STALE_CHECK_PERIOD
+                if self._arena_stale(arena):
+                    raise _PeerRestarted(dest)
             if now > deadline:
                 raise StragglerTimeout(
                     f"rank {self.pid} timed out waiting for {total} bytes "
@@ -546,19 +668,18 @@ class ShmComm(CommContext):
         tok_str = tag_token(tag)
         tok = tok_str.encode()
         key = (dest, tok_str)
-        seq = self._send_seq.get(key, 0)
-        self._send_seq[key] = seq + 1
         if dest == self.pid:
             # self-send: no ring exists for (p, p) — round-trip the frame
             # through a writable buffer so the receiver gets the same
             # private, mutable payload a ring delivery would produce
+            seq = self._send_seq.get(key, 0)
+            self._send_seq[key] = seq + 1
             blob = bytearray()
             for p in encode_frame(obj):
                 blob += p
             with self._lock:
                 self._mail[(dest, tok_str, seq)] = decode_frame(blob)
             return
-        arena = self._arena_to(dest)
         # one serialization either way: the flat frame is both the size
         # probe and (when oversize) the chunked payload
         parts = encode_frame(obj)
@@ -566,18 +687,38 @@ class ShmComm(CommContext):
         env_limit = max_msg_bytes()
         limit = min(env_limit, self._chunk_cap) if env_limit \
             else self._chunk_cap
-        if total > limit:
-            # oversize: stream the flat frame as <= limit CHUNK records
-            # on the same (tag, seq), reassembled into one buffer on the
-            # receive side
-            for off, slices in chunk_windows(parts, limit):
-                self._write_record(
-                    dest, arena, _K_CHUNK, tok, seq,
-                    _CHUNK_META.pack(off, total), slices,
-                )
+        # resolve the arena BEFORE minting the seq: when the peer
+        # restarted, ``_arena_to`` re-attaches and ``epoch_reset`` zeroes
+        # the stream, and the seq minted below is already the one the
+        # fresh incarnation expects.  A restart caught mid-wait inside
+        # ``_write_record`` surfaces as ``_PeerRestarted``; one retry
+        # re-resolves and re-sends the whole payload on the new ring
+        # (the dead ring's partial chunks died with their consumer).
+        for attempt in (0, 1):
+            arena = self._arena_to(dest)
+            seq = self._send_seq.get(key, 0)
+            try:
+                if total > limit:
+                    # oversize: stream the flat frame as <= limit CHUNK
+                    # records on the same (tag, seq), reassembled into
+                    # one buffer on the receive side
+                    for off, slices in chunk_windows(parts, limit):
+                        self._write_record(
+                            dest, arena, _K_CHUNK, tok, seq,
+                            _CHUNK_META.pack(off, total), slices,
+                        )
+                else:
+                    self._write_record(dest, arena, _K_MSG, tok, seq,
+                                       parts[0], parts[1:-2])
+            except _PeerRestarted:
+                if attempt:
+                    raise StragglerTimeout(
+                        f"rank {self.pid} saw rank {dest} restart twice "
+                        "within one send"
+                    ) from None
+                continue
+            self._send_seq[key] = seq + 1
             return
-        self._write_record(dest, arena, _K_MSG, tok, seq, parts[0],
-                           parts[1:-2])
 
     # -- receive path ----------------------------------------------------------
 
@@ -696,8 +837,10 @@ class ShmComm(CommContext):
                 if now > deadline:
                     src, _, seq = key
                     raise StragglerTimeout(
-                        f"rank {self.pid} timed out receiving {tag!r} "
-                        f"(seq {seq}) from rank {src} over shared memory"
+                        straggler_message(
+                            self, f"{tag!r} (seq {seq}) from rank {src}",
+                            "shared memory",
+                        )
                     )
                 if progressed:
                     # records are landing (e.g. a chunked payload
@@ -792,10 +935,76 @@ class ShmComm(CommContext):
         with self._lock:
             return mkey in self._mail
 
+    # -- elastic restart -------------------------------------------------------
+
+    def _peer_heartbeat(self, peer: int) -> float:
+        """``peer``'s latest heartbeat stamp (0.0 when unknowable).
+
+        Read from the mapped outbound arena when one is cached (that ring
+        is owned — and beaten — by ``peer``), else from the on-disk
+        header of any arena ``peer`` owns."""
+        arena = self._out.get(peer)
+        if arena is not None:
+            try:
+                return arena.heartbeat()
+            except ValueError:
+                return 0.0
+        path = self.dir / f"arena_s{self.pid}_d{peer}.ring"
+        try:
+            with open(path, "rb") as f:
+                f.seek(_OFF_HBEAT)
+                raw = f.read(_F64.size)
+        except OSError:
+            return 0.0
+        return _F64.unpack(raw)[0] if len(raw) == _F64.size else 0.0
+
+    def dead_ranks(self, max_age: float | None = None) -> list[int]:
+        """Peers whose arena heartbeat went stale (liveness contract)."""
+        if max_age is None:
+            max_age = self._hb_max_age
+        now = time.time()
+        dead = []
+        for peer in range(self.np_):
+            if peer == self.pid:
+                continue
+            hb = self._peer_heartbeat(peer)
+            if hb > 0.0 and now - hb > max_age:
+                dead.append(peer)
+        return dead
+
+    def pending_snapshot(self, limit: int = SNAPSHOT_LIMIT) -> list:
+        """Arrived-but-unclaimed (src, tag, seq) matches, bounded."""
+        with self._lock:
+            return sorted(self._mail.keys())[:limit]
+
+    def epoch_reset(self, peer: int, epoch: int | None = None) -> None:
+        """Reset all per-``peer`` stream state at an epoch boundary: the
+        restarted incarnation sends and receives from seq 0, so the
+        survivor's counters, matching-table residue, half-assembled
+        chunk payloads, and pre-registered receive buffers for the dead
+        incarnation must all go."""
+        if epoch is not None:
+            self.epoch = int(epoch)
+        for k in [k for k in self._send_seq if k[0] == peer]:
+            del self._send_seq[k]
+        for k in [k for k in self._recv_seq if k[0] == peer]:
+            del self._recv_seq[k]
+        with self._lock:
+            for k in [k for k in self._mail if k[0] == peer]:
+                del self._mail[k]
+            for k in [k for k in self._partial if k[0] == peer]:
+                del self._partial[k]
+            for k in [k for k in self._recv_into_bufs if k[0] == peer]:
+                del self._recv_into_bufs[k]
+
     # -- lifecycle -------------------------------------------------------------
 
     def finalize(self) -> None:
         self._closed = True
+        self._hb_stop.set()
+        if self._hb_thread is not None:
+            self._hb_thread.join(timeout=1.0)
+            self._hb_thread = None
         for arena in self._out.values():
             arena.close()
         self._out.clear()

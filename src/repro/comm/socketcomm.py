@@ -55,13 +55,16 @@ from typing import Any
 
 import numpy as np
 
+from ..obs import metrics as _metrics
 from .context import (
     CommContext,
     Request,
     StragglerTimeout,
     land_into as _land_into,
     recv_timeout,
+    run_epoch,
 )
+from .liveness import SNAPSHOT_LIMIT, straggler_message
 from .frame import (
     chunk_windows,
     decode_frame,
@@ -183,6 +186,7 @@ class SocketComm(CommContext):
         pid: int,
         endpoints: list[tuple[str, int]],
         listener: socket.socket,
+        epoch: int | None = None,
     ):
         if not (0 <= pid < np_):
             raise ValueError(f"pid {pid} out of range for np={np_}")
@@ -192,7 +196,16 @@ class SocketComm(CommContext):
             )
         self.np_ = np_
         self.pid = pid
+        self.epoch = run_epoch() if epoch is None else int(epoch)
         self.endpoints = [tuple(e) for e in endpoints]
+        # elastic-restart state: peers whose connection died abortively
+        # (mid-record EOF / ECONNRESET — a clean between-records close is
+        # a finalize, not a death), stale-generation HELLOs refused, and
+        # an optional hook the supervisor can install to re-resolve a
+        # restarted peer's endpoint before a redial
+        self._dead: set[int] = set()
+        self._stale_hellos = 0
+        self._refresh_endpoint = None  # dest -> fresh (host, port) | None
         self._send_seq: dict[tuple[int, str], int] = {}
         # next unreserved receive seq per (source, tag): blocking ``recv``
         # commits it only after the message is claimed (a StragglerTimeout
@@ -233,6 +246,7 @@ class SocketComm(CommContext):
         rdzv_dir: str | os.PathLike | None = None,
         host: str | None = None,
         timeout: float | None = None,
+        epoch: int | None = None,
     ) -> "SocketComm":
         """Bind an ephemeral listener, rendezvous the endpoint table, and
         return a connected context — the ``PPYTHON_TRANSPORT=socket``
@@ -244,11 +258,12 @@ class SocketComm(CommContext):
             endpoints = exchange_endpoints(
                 np_, pid, (host, port),
                 addr=rdzv_addr, rdzv_dir=rdzv_dir, timeout=timeout,
+                epoch=epoch,
             )
         except BaseException:
             listener.close()
             raise
-        return cls(np_, pid, endpoints, listener)
+        return cls(np_, pid, endpoints, listener, epoch=epoch)
 
     # -- connection management ----------------------------------------------
 
@@ -268,16 +283,27 @@ class SocketComm(CommContext):
             t.start()
             self._readers.append(t)
 
-    def _peer_sock(self, dest: int) -> tuple[socket.socket, threading.Lock]:
-        """Persistent simplex connection to ``dest`` (dial on first use)."""
+    def _peer_sock(
+        self, dest: int, deadline: float | None = None,
+    ) -> tuple[socket.socket, threading.Lock]:
+        """Persistent simplex connection to ``dest`` (dial on first use).
+
+        The dial loop retries with capped exponential backoff; each retry
+        consults the ``_refresh_endpoint`` hook (when installed) so a
+        peer restarted onto a fresh ephemeral port is re-resolved rather
+        than dialed at its ghost's address.  The HELLO carries this
+        rank's epoch — a restarted receiver refuses HELLOs from dead
+        generations."""
         with self._peers_guard:
             sock = self._peers.get(dest)
             if sock is not None:
                 return sock, self._peer_locks[dest]
             lock = self._peer_locks.setdefault(dest, threading.Lock())
-        host, port = self.endpoints[dest]
-        deadline = time.monotonic() + recv_timeout()
+        if deadline is None:
+            deadline = time.monotonic() + recv_timeout()
+        backoff = _DIAL_RETRY
         while True:
+            host, port = self.endpoints[dest]
             s = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
             try:
                 s.settimeout(max(0.5, deadline - time.monotonic()))
@@ -290,15 +316,39 @@ class SocketComm(CommContext):
                         f"rank {self.pid} could not connect to rank {dest} "
                         f"at {host}:{port}: {e}"
                     ) from None
-                time.sleep(_DIAL_RETRY)
+                self._maybe_refresh(dest)
+                time.sleep(backoff)
+                backoff = min(backoff * 2, 1.0)
         s.settimeout(None)
         s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-        s.sendall(_HDR.pack(_MAGIC, _K_HELLO, 0, self.pid, 0, 0))
+        s.sendall(_HDR.pack(_MAGIC, _K_HELLO, 0, self.pid, self.epoch, 0))
         with self._peers_guard:
             won = self._peers.setdefault(dest, s)
         if won is not s:  # lost a concurrent-dial race: use the winner
             s.close()
         return won, lock
+
+    def _maybe_refresh(self, dest: int) -> None:
+        """Re-resolve ``dest``'s endpoint through the supervisor hook."""
+        refresh = self._refresh_endpoint
+        if refresh is None:
+            return
+        try:
+            ep = refresh(dest)
+        except Exception:
+            return  # best-effort: keep dialing the known endpoint
+        if ep:
+            self.endpoints[dest] = tuple(ep)
+
+    def _invalidate_peer(self, dest: int) -> None:
+        """Drop (and close) the cached connection to ``dest``."""
+        with self._peers_guard:
+            s = self._peers.pop(dest, None)
+        if s is not None:
+            try:
+                s.close()
+            except OSError:
+                pass
 
     # -- send path ------------------------------------------------------------
 
@@ -314,21 +364,44 @@ class SocketComm(CommContext):
         return parts
 
     def _send_record(self, dest: int, parts: list) -> None:
-        sock, lock = self._peer_sock(dest)
-        with lock:
-            try:
-                # coalesce the small leading parts into one segment; big
-                # raw buffers go straight from their exporter's memory
-                small = b"".join(
-                    bytes(p) for p in parts[:4]
-                )
-                sock.sendall(small)
-                for p in parts[4:]:
-                    sock.sendall(p)
-            except OSError as e:
+        """Write one record, redialing through restarts.
+
+        A mid-send OSError means the connection died (the peer crashed or
+        was restarted).  The cached socket is invalidated, ``dest`` is
+        marked dead, and the record is re-sent over a fresh dial —
+        bounded by the recv-timeout budget.  Re-sending a full record is
+        safe: the dead incarnation's partial bytes died with its reader,
+        and the restarted incarnation starts a fresh stream."""
+        deadline = time.monotonic() + recv_timeout()
+        redialed = False
+        while True:
+            sock, lock = self._peer_sock(dest, deadline=deadline)
+            with lock:
+                try:
+                    # coalesce the small leading parts into one segment;
+                    # big raw buffers go straight from their exporter's
+                    # memory
+                    small = b"".join(
+                        bytes(p) for p in parts[:4]
+                    )
+                    sock.sendall(small)
+                    for p in parts[4:]:
+                        sock.sendall(p)
+                    if redialed:
+                        self._dead.discard(dest)
+                    return
+                except OSError as e:
+                    err = e
+            self._invalidate_peer(dest)
+            self._dead.add(dest)
+            if self._closed.is_set() or time.monotonic() > deadline:
                 raise StragglerTimeout(
-                    f"rank {self.pid} lost its connection to rank {dest}: {e}"
+                    f"rank {self.pid} lost its connection to rank {dest} "
+                    f"and could not re-establish it: {err}"
                 ) from None
+            redialed = True
+            self._maybe_refresh(dest)
+            _metrics.counter("elastic.socket_redials").inc()
 
     def send(self, dest: int, tag: Any, obj: Any) -> None:
         if not (0 <= dest < self.np_):
@@ -402,6 +475,15 @@ class SocketComm(CommContext):
                     if magic != _MAGIC:
                         raise ValueError(f"bad record magic {bytes(magic)!r}")
                     if kind == _K_HELLO:
+                        # the HELLO reuses the head_len field to carry
+                        # the dialer's epoch; a ghost of a dead
+                        # generation is refused outright — its connection
+                        # closes and it can never post into this
+                        # generation's matching table
+                        if head_len < self.epoch:
+                            self._stale_hellos += 1
+                            _metrics.counter("elastic.stale_hellos").inc()
+                            return
                         src = seq
                         continue
                     lens = struct.unpack(
@@ -455,16 +537,23 @@ class SocketComm(CommContext):
         except (OSError, ConnectionError, ValueError, struct.error) as e:
             if not self._closed.is_set():
                 self._rx_error = e
+                if src >= 0:
+                    # abortive death mid-record: the sender crashed (a
+                    # clean between-records EOF returns above instead)
+                    self._dead.add(src)
 
     def _take(self, key: tuple, tag: Any, timeout: float) -> Any:
         try:
             return self._mail.take(key, timeout)
         except StragglerTimeout:
             src, _, seq = key
-            extra = f"; receiver error: {self._rx_error}" if self._rx_error else ""
+            extra = (f"; receiver error: {self._rx_error}"
+                     if self._rx_error else "")
             raise StragglerTimeout(
-                f"rank {self.pid} timed out receiving {tag!r} (seq {seq}) "
-                f"from rank {src} over TCP{extra}"
+                straggler_message(
+                    self, f"{tag!r} (seq {seq}) from rank {src}", "TCP",
+                    extra=extra,
+                )
             ) from None
 
     def recv(self, source: int, tag: Any, timeout: float | None = None) -> Any:
@@ -514,6 +603,35 @@ class SocketComm(CommContext):
         key = (source, tag_token(tag))
         seq = self._recv_seq.get(key, 0)
         return self._mail.peek((source, key[1], seq))
+
+    # -- elastic restart -------------------------------------------------------
+
+    def dead_ranks(self) -> list[int]:
+        """Peers whose connection died abortively (liveness contract)."""
+        return sorted(self._dead)
+
+    def pending_snapshot(self, limit: int = SNAPSHOT_LIMIT) -> list:
+        """Arrived-but-unclaimed (src, tag, seq) matches, bounded."""
+        return sorted(self._mail.keys())[:limit]
+
+    def epoch_reset(self, peer: int, epoch: int | None = None) -> None:
+        """Reset all per-``peer`` stream state at an epoch boundary: the
+        restarted incarnation sends and receives from seq 0, so the
+        survivor's counters, cached connection, matching-table residue,
+        and pre-registered receive buffers for the dead incarnation must
+        all go."""
+        if epoch is not None:
+            self.epoch = int(epoch)
+        self._invalidate_peer(peer)
+        for key in [k for k in self._send_seq if k[0] == peer]:
+            del self._send_seq[key]
+        for key in [k for k in self._recv_seq if k[0] == peer]:
+            del self._recv_seq[key]
+        self._mail.purge(lambda k: k[0] == peer)
+        with self._reg_lock:
+            for k in [k for k in self._recv_into_bufs if k[0] == peer]:
+                del self._recv_into_bufs[k]
+        self._dead.discard(peer)
 
     # -- lifecycle -------------------------------------------------------------
 

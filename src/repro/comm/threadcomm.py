@@ -84,6 +84,22 @@ class ThreadWorld:
         with self._lock:
             return key in self._box
 
+    def keys(self) -> list[tuple]:
+        """Snapshot of arrived-but-unclaimed match keys (diagnostics)."""
+        with self._lock:
+            return list(self._box.keys())
+
+    def purge(self, pred) -> int:
+        """Drop every posted entry whose key satisfies ``pred`` — the
+        epoch-boundary reset for fabrics that use the mailbox as their
+        matching table (a dead generation's in-flight messages must not
+        satisfy the restarted generation's receives)."""
+        with self._lock:
+            doomed = [k for k in self._box if pred(k)]
+            for k in doomed:
+                del self._box[k]
+            return len(doomed)
+
 
 class _ThreadRecvRequest(Request):
     """Receive handle bound to a reserved (source, tag, seq) slot."""

@@ -68,3 +68,49 @@ def crash_on_rank1() -> bool:
         os._exit(3)
     get_context().barrier()  # never completes: the launcher kills us
     return True
+
+
+def elastic_allreduce() -> tuple:
+    """Elastic e2e body: a loop of deterministic allgather-sums with a
+    per-rank checkpoint each step.  Under ``PPYTHON_FAULT`` one rank is
+    killed mid-loop; the gang restart relaunches the world, every rank
+    resumes from the last step *all* ranks hold (``elastic_resume_step``),
+    and deterministic replay makes the final state bitwise-equal to an
+    unfaulted run's.  Returns ``(state, final_epoch)``."""
+    import os
+
+    from repro.comm.context import run_epoch
+    from repro.train.checkpoint import CheckpointManager, elastic_resume_step
+
+    ctx = get_context()
+    mgr = CheckpointManager(
+        os.path.join(os.environ["PPYTHON_ELASTIC_CKPT"], f"rank{Pid()}")
+    )
+    steps = 6
+    state = np.zeros(8)
+    start = 0
+    resume = elastic_resume_step(mgr, ctx)
+    if resume is not None:
+        _, trees, _ = mgr.restore(step=resume)
+        state = np.asarray(trees["state"]["x"])
+        start = resume + 1
+    for step in range(start, steps):
+        contrib = (np.arange(8.0) + 1.0) * float((Pid() + 1) * (step + 1))
+        for v in ctx.allgather(contrib, tag=("ell", step)):
+            state = state + v
+        mgr.save(step, {"state": {"x": state}})
+    mgr.wait()
+    return state.tolist(), run_epoch()
+
+
+def crash_once_pingpong() -> float:
+    """Elastic-restart body: rank 1 dies hard in epoch 0; the gang
+    restart relaunches the world under epoch 1 (which doubles as the
+    "already crashed" marker) and the pingpong completes cleanly."""
+    import os
+
+    from repro.comm.context import run_epoch
+
+    if Pid() == 1 and run_epoch() == 0:
+        os._exit(17)
+    return pingpong()

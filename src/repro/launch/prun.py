@@ -39,13 +39,20 @@ shm cleanup even when only the TCP half of the bootstrap fails;
 (module:function targets only) — the fastest way to run an SPMD body
 with zero launch overhead.
 
-Fault handling beyond the paper: a per-rank supervisor notices dead
-processes (nonzero exit) and, when ``restarts > 0``, relaunches the rank
-with the same environment — restarted ranks are expected to resume from
-the last checkpoint (see ``repro.train.checkpoint``).  An auto-created
-scratch directory is removed on clean exit but **kept on failure** (with
-a notice) so message files and results can be inspected post-mortem —
-the paper's debugging affordance, extended to crashes.
+Fault handling beyond the paper: the supervisor notices dead processes
+(nonzero exit) and, while ``restarts > 0`` budget remains, **gang
+restarts the whole world** under a bumped epoch (``PPYTHON_EPOCH``) —
+every transport fences messages, rendezvous registrations, socket
+HELLOs, and arena headers by that generation counter, so no ghost of a
+dead generation can ever talk to the relaunched one.  Relaunched ranks
+are expected to resume from the latest checkpoint (see
+``repro.train.checkpoint.elastic_resume_step``); with deterministic
+replay the faulted run finishes bitwise-equal to an unfaulted one.
+``PPYTHON_FAULT`` (see ``repro.comm.faultinject``) arms deterministic
+kill/delay/drop faults in the workers for chaos testing.  An
+auto-created scratch directory is removed on clean exit but **kept on
+failure** (with a notice) so message files and results can be inspected
+post-mortem — the paper's debugging affordance, extended to crashes.
 """
 
 from __future__ import annotations
@@ -78,26 +85,35 @@ def _worker_cmd(target: str, extra_args: Sequence[str]) -> list[str]:
 
 
 def _serve_rendezvous(np_: int, timeout: float):
-    """Bind a loopback rendezvous listener and serve the endpoint
-    exchange on a daemon thread.  Binding port 0 and serving the *live*
-    socket (instead of probe-port-then-close-then-rebind) means the
-    advertised port can never be stolen between probe and bind, and two
-    concurrent pRUN launches can never cross-register into each other's
-    server.  Returns (addr, server_socket); close the socket to stop."""
-    from ..comm.rendezvous import bind_listener, serve_endpoint_table
+    """Bind a loopback rendezvous listener and serve endpoint exchanges
+    on a daemon thread.  Binding port 0 and serving the *live* socket
+    (instead of probe-port-then-close-then-rebind) means the advertised
+    port can never be stolen between probe and bind, and two concurrent
+    pRUN launches can never cross-register into each other's server.
+
+    The server is the multi-generation variant: one listener serves the
+    epoch-0 exchange and every gang-restart generation after it, so a
+    relaunched world re-registers fresh endpoints with no port churn.
+    Returns ``(addr, server_socket, errors)``; close the socket to stop.
+    A serving failure (e.g. a rank that never registered) is appended to
+    ``errors`` for the supervising loop to raise *promptly* — a silent
+    bootstrap death must not surface minutes later as a generic worker
+    timeout."""
+    from ..comm.rendezvous import bind_listener, serve_generations
 
     srv = bind_listener("127.0.0.1")
     addr = f"127.0.0.1:{srv.getsockname()[1]}"
     deadline = time.monotonic() + timeout
+    errors: list[BaseException] = []
 
     def serve() -> None:
         try:
-            serve_endpoint_table(srv, np_, deadline)
-        except Exception:  # noqa: BLE001 - workers surface their own
-            pass  # timeout/close: the supervising loop reports the failure
+            serve_generations(srv, np_, deadline)
+        except Exception as e:  # noqa: BLE001 - surfaced by the supervisor
+            errors.append(e)
 
     threading.Thread(target=serve, name="ppython-rdzv", daemon=True).start()
-    return addr, srv
+    return addr, srv, errors
 
 
 def _run_threaded(target: str, np_: int, args: Sequence[str],
@@ -165,18 +181,6 @@ def pRUN(
         )
     if transport == "thread":
         return _run_threaded(target, np_, args, timeout, env)
-    if transport in ("socket", "hier") and restarts > 0:
-        raise ValueError(
-            "pRUN restarts need the file transport for now: a restarted "
-            "rank cannot re-join a completed socket rendezvous (peers hold "
-            "the dead rank's stale endpoint)"
-        )
-    if transport == "shm" and restarts > 0:
-        raise ValueError(
-            "pRUN restarts need the file transport for now: a restarted "
-            "rank would re-create its inbound arenas under the peers' "
-            "live mappings"
-        )
 
     own_dir = comm_dir is None
     comm_dir = Path(
@@ -189,6 +193,12 @@ def pRUN(
     base_env.update(env or {})
     base_env["PPYTHON_NP"] = str(np_)
     base_env["PPYTHON_TRANSPORT"] = transport
+    # the world generation: 0 at launch, bumped on every gang restart.
+    # Never inherited from os.environ (a worker launching a nested pRUN
+    # would leak its own epoch into the fresh world); only an explicit
+    # env= pin survives.
+    if not (env and "PPYTHON_EPOCH" in env):
+        base_env["PPYTHON_EPOCH"] = "0"
     if trace is not None:
         base_env["PPYTHON_TRACE"] = "1" if trace else "0"
         if trace:
@@ -197,6 +207,7 @@ def pRUN(
     # file transport also sends messages through it
     base_env["PPYTHON_COMM_DIR"] = str(comm_dir)
     rdzv_srv = None
+    rdzv_errors: list[BaseException] = []
     shm_dir: Path | None = None
     if transport == "hier":
         # a rank's node id must come from THIS launch (nodes= below) or
@@ -233,7 +244,7 @@ def pRUN(
         # runs AFTER the shm block, so the finally's unconditional
         # arena-dir rmtree covers a rendezvous/bootstrap failure too —
         # the TCP half failing can never leak /dev/shm arenas.
-        addr, rdzv_srv = _serve_rendezvous(np_, timeout)
+        addr, rdzv_srv, rdzv_errors = _serve_rendezvous(np_, timeout)
         base_env["PPYTHON_RDZV_ADDR"] = addr
         base_env["PPYTHON_RDZV_EXTERNAL"] = "1"
         base_env.setdefault("PPYTHON_HOST", "127.0.0.1")
@@ -250,7 +261,9 @@ def pRUN(
 
     cmd = _worker_cmd(target, list(args))
     procs: dict[int, subprocess.Popen] = {}
-    budget: dict[int, int] = {pid: restarts for pid in range(np_)}
+    restarts_left = restarts
+    epoch = int(base_env.get("PPYTHON_EPOCH", "0") or 0)
+    explicit_env = env or {}
 
     def launch(pid: int) -> None:
         e = dict(base_env)
@@ -260,6 +273,44 @@ def pRUN(
             # repro.comm.testing.virtual_node_ids
             e["PPYTHON_NODE_ID"] = str(pid * max(1, min(nodes, np_)) // np_)
         procs[pid] = subprocess.Popen(cmd, env=e)
+
+    def gang_restart(dead_pid: int, rc: int) -> None:
+        """Relaunch the WHOLE world under a bumped epoch.
+
+        A single-rank restart cannot work on the fast fabrics: survivors
+        hold collective state (context-minted tags, half-run algorithms)
+        the fresh rank never saw, so the restarted rank would deadlock
+        against mid-collective peers.  Killing everyone and replaying
+        from the latest checkpoint is deterministic — and the epoch
+        fence (rendezvous registrations, socket HELLOs, arena headers,
+        file-message names) guarantees no ghost of the dead generation
+        can ever talk to the new one."""
+        nonlocal epoch
+        epoch += 1
+        print(
+            f"pRUN: rank {dead_pid} exited with code {rc}; gang-restarting "
+            f"all {np_} ranks as epoch {epoch} "
+            f"({restarts_left} restart(s) left)",
+            file=sys.stderr,
+        )
+        for q in procs.values():
+            if q.poll() is None:
+                q.kill()
+        for q in procs.values():
+            q.wait()
+        procs.clear()
+        base_env["PPYTHON_EPOCH"] = str(epoch)
+        if (transport in ("shm", "hier")
+                and "PPYTHON_SHM_NONCE" not in explicit_env):
+            # a fresh nonce per generation: the relaunched world can
+            # never attach to the dead generation's arenas, even before
+            # their owners recreate them
+            base_env["PPYTHON_SHM_NONCE"] = uuid.uuid4().hex
+        from ..obs import metrics as _metrics
+
+        _metrics.counter("elastic.restarts").inc()
+        for pid in range(np_):
+            launch(pid)
 
     deadline = time.monotonic() + timeout
     failed = True
@@ -271,24 +322,31 @@ def pRUN(
             launch(pid)
 
         while True:
+            if rdzv_errors:
+                for q in procs.values():
+                    if q.poll() is None:
+                        q.kill()
+                raise RuntimeError(
+                    f"pRUN rendezvous bootstrap failed: {rdzv_errors[0]}"
+                ) from rdzv_errors[0]
             alive = False
             for pid, p in list(procs.items()):
                 rc = p.poll()
                 if rc is None:
                     alive = True
                 elif rc != 0:
-                    if budget[pid] > 0:
-                        budget[pid] -= 1
-                        launch(pid)  # rank restart (resumes from checkpoint)
+                    if restarts_left > 0:
+                        restarts_left -= 1
+                        gang_restart(pid, rc)
                         alive = True
-                    else:
-                        for q in procs.values():
-                            if q.poll() is None:
-                                q.kill()
-                        raise RuntimeError(
-                            f"pRUN rank {pid} exited with code {rc} "
-                            f"(no restart budget left)"
-                        )
+                        break  # procs was rebuilt: restart the scan
+                    for q in procs.values():
+                        if q.poll() is None:
+                            q.kill()
+                    raise RuntimeError(
+                        f"pRUN rank {pid} exited with code {rc} "
+                        f"(no restart budget left)"
+                    )
             if not alive:
                 break
             if time.monotonic() > deadline:
@@ -356,6 +414,14 @@ def prun_worker(target: str, argv: Sequence[str]) -> None:
     mod_name, fn_name = target.split(":", 1)
     ctx = init()
     try:
+        from ..comm.context import run_epoch
+        from ..obs import trace as _trace
+
+        if run_epoch() > 0 and _trace.enabled:
+            # mark the resume in the timeline: a merged trace of an
+            # elastic run shows where the relaunched generation began
+            _trace.instant("elastic.resume", epoch=run_epoch(),
+                           rank=ctx.pid)
         mod = importlib.import_module(mod_name)
         fn = getattr(mod, fn_name)
         result = fn(*argv) if argv else fn()

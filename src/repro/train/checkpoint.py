@@ -31,7 +31,28 @@ import numpy as np
 
 from ..core.pitfalls import FALLS, falls_intersect
 
-__all__ = ["CheckpointManager", "save_tree", "load_tree", "reshard_read"]
+__all__ = ["CheckpointManager", "elastic_resume_step", "load_tree",
+           "reshard_read", "save_tree"]
+
+
+def _fsync_dir(path: Path) -> None:
+    """fsync a directory fd so the entries inside it are durable.
+
+    The rename-into-place publish is only atomic against *readers*; a
+    host crash can still lose the rename (or the files it points at)
+    unless the data, the directory that names it, and the parent that
+    names the rename are all synced.  Best-effort on filesystems that
+    reject directory fsync."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
 
 
 def _flatten(tree: dict, prefix: str = "") -> list[tuple[str, Any]]:
@@ -90,8 +111,15 @@ def save_tree(step_dir: Path, name: str, tree: dict) -> dict:
         segs = []
         for i, (data, idx) in enumerate(_leaf_segments(leaf)):
             fn = f"{name}__{path}__s{i}.npy"
-            np.save(step_dir / fn, data)
-            segs.append({"file": fn, "index": idx})
+            # write through an explicit handle so the shard can be
+            # fsynced: a crash after the step dir's rename-publish must
+            # not leave a discoverable checkpoint with torn shards
+            with open(step_dir / fn, "wb") as f:
+                np.save(f, data)
+                f.flush()
+                os.fsync(f.fileno())
+            segs.append({"file": fn, "index": idx,
+                         "nbytes": (step_dir / fn).stat().st_size})
         entries[path] = {
             "shape": [int(s) for s in np.shape(leaf)],
             "dtype": arr_dtype,
@@ -228,9 +256,17 @@ class CheckpointManager:
             manifest["trees"][name] = save_tree(tmp, name, tree)
         with open(tmp / "manifest.json", "w") as f:
             json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        # durability order: shard files (synced in save_tree) → manifest
+        # (just synced) → the directory naming them → the rename → the
+        # parent naming the rename.  Only then is the checkpoint both
+        # discoverable and whole after a host crash.
+        _fsync_dir(tmp)
         if final.exists():
             shutil.rmtree(final)
         os.rename(tmp, final)  # atomic publish
+        _fsync_dir(self.dir)
         self._gc()
 
     def wait(self) -> None:
@@ -245,15 +281,39 @@ class CheckpointManager:
 
     # -- restore -------------------------------------------------------------------
 
-    def list_steps(self) -> list[int]:
-        return sorted(
+    def _manifest_ok(self, step_dir: Path) -> bool:
+        """Quick integrity check: the manifest parses, every segment
+        file exists, and recorded sizes match.  Restart discovery uses
+        this to *skip* a checkpoint torn by a crash instead of raising
+        minutes into the relaunch (an explicit ``restore(step=...)``
+        still raises, so a truly broken step is loudly inspectable)."""
+        try:
+            with open(step_dir / "manifest.json") as f:
+                manifest = json.load(f)
+            for entries in manifest.get("trees", {}).values():
+                for entry in entries.values():
+                    for seg in entry["segments"]:
+                        p = step_dir / seg["file"]
+                        size = p.stat().st_size  # raises if missing
+                        if "nbytes" in seg and size != seg["nbytes"]:
+                            return False
+        except (OSError, ValueError, KeyError, TypeError):
+            return False
+        return True
+
+    def list_steps(self, valid_only: bool = False) -> list[int]:
+        steps = sorted(
             int(p.name.split("-")[1])
             for p in self.dir.glob("step-*")
             if p.is_dir() and not p.name.endswith(".tmp")
         )
+        if not valid_only:
+            return steps
+        return [s for s in steps
+                if self._manifest_ok(self.dir / f"step-{s:08d}")]
 
     def latest_step(self) -> int | None:
-        steps = self.list_steps()
+        steps = self.list_steps(valid_only=True)
         return steps[-1] if steps else None
 
     def restore(
@@ -273,3 +333,23 @@ class CheckpointManager:
             sh = (shardings or {}).get(name)
             trees[name] = load_tree(step_dir, name, entries, sh)
         return step, trees, manifest.get("meta", {})
+
+
+def elastic_resume_step(mgr: CheckpointManager, ctx=None) -> int | None:
+    """The step every rank of a relaunched world should resume from.
+
+    A rank killed mid-step may hold one fewer checkpoint than its peers
+    (per-rank checkpoint roots, or an async save that never landed), so
+    the *consistent* recovery line is the minimum of the per-rank latest
+    valid steps — replay from there is deterministic, which is what
+    makes a faulted run finish bitwise-equal to an unfaulted one.
+    Returns ``None`` when any rank has no valid checkpoint (the world
+    must start from scratch together).  Without ``ctx`` (or a
+    single-rank world) this is just this rank's ``latest_step()``."""
+    mine = mgr.latest_step()
+    if ctx is None or getattr(ctx, "np_", 1) <= 1:
+        return mine
+    latest = ctx.allgather(-1 if mine is None else int(mine),
+                           tag="__ckpt_resume")
+    lo = min(latest)
+    return None if lo < 0 else lo

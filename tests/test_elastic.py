@@ -1,0 +1,641 @@
+"""Elastic fault-tolerant runtime: epoch fencing, liveness, deterministic
+fault injection, checkpoint durability, and gang restart end-to-end.
+
+Units cover each fence layer in isolation (rendezvous generations, socket
+HELLO epochs + redial, shm arena staleness + re-attach, FileMPI epoch
+tokens, the PPYTHON_FAULT grammar, torn-checkpoint discovery); the e2e
+matrix kills a rank mid-run on every process transport and demands the
+gang-restarted world finish bitwise-equal to an unfaulted run.
+"""
+
+import json
+import socket as socket_mod
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.comm import FileMPI, ShmComm, SocketComm, StragglerTimeout
+from repro.comm.faultinject import (
+    FaultPlan,
+    instrument_faults,
+    parse_fault,
+    plan_from_env,
+)
+from repro.comm.liveness import straggler_message
+from repro.comm.rendezvous import (
+    _recv_rec,
+    _send_rec,
+    bind_listener,
+    rendezvous_file,
+    rendezvous_tcp,
+    serve_endpoint_table,
+    serve_generations,
+)
+from repro.comm.testing import shm_base_dir
+from repro.obs import metrics
+from repro.train.checkpoint import CheckpointManager, elastic_resume_step
+
+
+def _threaded(np_, body, join=30):
+    results = [None] * np_
+    errors = [None] * np_
+
+    def run(pid):
+        try:
+            results[pid] = body(pid)
+        except BaseException as e:  # noqa: BLE001
+            errors[pid] = e
+
+    ts = [threading.Thread(target=run, args=(p,)) for p in range(np_)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(join)
+    for e in errors:
+        if e is not None:
+            raise e
+    return results
+
+
+# ---------------------------------------------------------------------------
+# fault injection: PPYTHON_FAULT grammar + deterministic plans
+# ---------------------------------------------------------------------------
+
+
+class TestFaultInject:
+    def test_parse_multi_clause(self):
+        specs = parse_fault(
+            "kill:rank=2,after_sends=40;"
+            "delay:rank=1,op=recv,ms=5,prob=0.1,seed=7;"
+            "drop_once:rank=0,after_sends=3,count=2"
+        )
+        assert [s.action for s in specs] == ["kill", "delay", "drop_once"]
+        assert specs[0].rank == 2 and specs[0].after_sends == 40
+        assert specs[1].op == "recv" and specs[1].seed == 7
+        assert specs[2].count == 2
+
+    @pytest.mark.parametrize("junk", [
+        "explode:rank=1",            # unknown action
+        "kill:rank",                 # not key=value
+        "kill:wat=3",                # unknown key
+        "delay:op=sideways",         # bad op
+        "kill:rank=one",             # non-integer
+    ])
+    def test_parse_rejects_junk_loudly(self, junk):
+        with pytest.raises(ValueError):
+            parse_fault(junk)
+
+    def test_plan_filters_by_rank_and_epoch(self):
+        specs = parse_fault("kill:rank=1;kill:rank=2,epoch=1")
+        assert not FaultPlan(specs=specs, pid=0, epoch=0).armed
+        assert FaultPlan(specs=specs, pid=1, epoch=0).armed
+        # the epoch gate: rank 2's fault is armed only in generation 1,
+        # so a restarted world (epoch 1) replays it and an epoch-0 world
+        # never sees it — and vice versa for the default epoch-0 faults
+        assert not FaultPlan(specs=specs, pid=2, epoch=0).armed
+        assert FaultPlan(specs=specs, pid=2, epoch=1).armed
+        assert not FaultPlan(specs=specs, pid=1, epoch=1).armed
+
+    def test_kill_fires_on_counter_threshold(self):
+        fired = []
+        plan = FaultPlan(
+            specs=parse_fault("kill:rank=0,after_sends=2"), pid=0,
+            kill_fn=lambda: fired.append(plan.sends),
+        )
+        plan.before_send()
+        plan.before_send()
+        assert not fired  # sends 1 and 2 delivered
+        plan.before_send()
+        assert fired == [2]  # the 3rd send trips the armed kill
+
+    def test_drop_once_eats_exactly_count_sends(self):
+        plan = FaultPlan(
+            specs=parse_fault("drop_once:rank=0,after_sends=1"), pid=0,
+        )
+        delivered = [plan.before_send() for _ in range(4)]
+        assert delivered == [True, False, True, True]
+
+    def test_seeded_delay_is_reproducible(self, monkeypatch):
+        import repro.comm.faultinject as fi
+
+        slept: list[float] = []
+        monkeypatch.setattr(fi.time, "sleep",
+                            lambda s: slept.append(s))
+
+        def run_one():
+            plan = FaultPlan(
+                specs=parse_fault("delay:rank=0,op=recv,ms=3,prob=0.4,seed=9"),
+                pid=0,
+            )
+            mark = len(slept)
+            pattern = []
+            for _ in range(32):
+                plan.before_recv()
+                pattern.append(len(slept) - mark)
+            return pattern
+
+        assert run_one() == run_one()  # same seed, same stall pattern
+
+    def test_plan_from_env(self, monkeypatch):
+        monkeypatch.delenv("PPYTHON_FAULT", raising=False)
+        assert plan_from_env(0) is None
+        monkeypatch.setenv("PPYTHON_FAULT", "kill:rank=1")
+        assert plan_from_env(0) is None       # targets another rank
+        assert plan_from_env(1) is not None
+        assert plan_from_env(1, epoch=1) is None  # fault is epoch-0 only
+
+    def test_instrument_wraps_send_and_is_idempotent(self, monkeypatch):
+        monkeypatch.setenv("PPYTHON_FAULT", "drop_once:rank=0,after_sends=1")
+
+        class Dummy:
+            pid = 0
+            np_ = 2
+
+            def __init__(self):
+                self.sent = []
+
+            def send(self, dest, tag, obj):
+                self.sent.append(obj)
+
+            def isend(self, dest, tag, obj):
+                self.send(dest, tag, obj)
+
+            def recv(self, source, tag, timeout=None):
+                return "msg"
+
+        ctx = Dummy()
+        assert instrument_faults(ctx) is ctx
+        assert instrument_faults(ctx) is ctx  # idempotent
+        for i in range(4):
+            ctx.send(1, "t", i)
+        assert ctx.sent == [0, 2, 3]  # the 2nd send vanished
+
+
+# ---------------------------------------------------------------------------
+# rendezvous generations: the bootstrap-time epoch fence
+# ---------------------------------------------------------------------------
+
+
+class TestRendezvousEpochFence:
+    def test_serve_endpoint_table_drops_stale_generation(self):
+        srv = bind_listener("127.0.0.1")
+        port = srv.getsockname()[1]
+        addr = f"127.0.0.1:{port}"
+        holder = {}
+
+        def serve():
+            holder["table"] = serve_endpoint_table(
+                srv, 2, time.monotonic() + 15, epoch=1
+            )
+
+        t = threading.Thread(target=serve, daemon=True)
+        t.start()
+        # a ghost of the dead generation registers first — the server
+        # must close it without counting it toward the table
+        ghost = socket_mod.create_connection(("127.0.0.1", port), timeout=5)
+        _send_rec(ghost, (0, 0, ("ghost", 1)))
+        live = _threaded(2, lambda pid: rendezvous_tcp(
+            2, pid, ("127.0.0.1", 9200 + pid), addr,
+            timeout=15, external_server=True, epoch=1,
+        ))
+        t.join(20)
+        want = [("127.0.0.1", 9200), ("127.0.0.1", 9201)]
+        assert holder["table"] == want
+        assert all(tb == want for tb in live)
+        ghost.settimeout(5)
+        assert ghost.recv(64) == b""  # server hung up on the ghost
+        ghost.close()
+
+    def test_serve_generations_sequential_epochs_and_cache(self):
+        srv = bind_listener("127.0.0.1")
+        addr = f"127.0.0.1:{srv.getsockname()[1]}"
+        t = threading.Thread(
+            target=serve_generations, args=(srv, 2, time.monotonic() + 30),
+            daemon=True,
+        )
+        t.start()
+
+        def world(epoch):
+            return _threaded(2, lambda pid: rendezvous_tcp(
+                2, pid, ("127.0.0.1", 9300 + 10 * epoch + pid), addr,
+                timeout=15, external_server=True, epoch=epoch,
+            ))
+
+        t0 = world(0)
+        t1 = world(1)  # the relaunched generation, same listener
+        assert t0[0] == [("127.0.0.1", 9300), ("127.0.0.1", 9301)]
+        assert t1[0] == [("127.0.0.1", 9310), ("127.0.0.1", 9311)]
+        # a completed generation is cached: a rank whose table read raced
+        # a drop re-registers and is answered immediately
+        again = rendezvous_tcp(2, 0, ("127.0.0.1", 9300), addr,
+                               timeout=10, external_server=True, epoch=0)
+        assert again == t0[0]
+        srv.close()
+        t.join(10)
+        assert not t.is_alive()
+
+    def test_serve_rendezvous_surfaces_bootstrap_errors(self):
+        from repro.launch.prun import _serve_rendezvous
+
+        addr, srv, errors = _serve_rendezvous(2, timeout=1.2)
+        host, port = addr.rsplit(":", 1)
+        # only rank 0 ever registers: the generation can never complete,
+        # and the serve thread must record the timeout for the supervisor
+        # to raise promptly instead of swallowing it
+        s = socket_mod.create_connection((host, int(port)), timeout=5)
+        _send_rec(s, (0, 0, ("127.0.0.1", 9400)))
+        deadline = time.monotonic() + 10
+        while not errors and time.monotonic() < deadline:
+            time.sleep(0.05)
+        s.close()
+        assert errors, "serve thread swallowed its bootstrap failure"
+        assert isinstance(errors[0], StragglerTimeout)
+        assert "incomplete" in str(errors[0])
+
+    def test_file_rendezvous_epoch_token_fences_stale_files(self, tmp_path):
+        # a dead generation's endpoint file must not poison the relaunch
+        (tmp_path / "ep_0").write_bytes(b"junk from a dead generation")
+        tables = _threaded(2, lambda pid: rendezvous_file(
+            2, pid, ("h", 9500 + pid), tmp_path, timeout=10, epoch=1,
+        ))
+        want = [("h", 9500), ("h", 9501)]
+        assert all(tb == want for tb in tables)
+        assert (tmp_path / "ep_0").exists()  # fenced out, not claimed
+
+
+# ---------------------------------------------------------------------------
+# socket transport: stale HELLOs, redial, epoch reset
+# ---------------------------------------------------------------------------
+
+
+def _socket_pair(epoch_a=0, epoch_b=0):
+    la = bind_listener("127.0.0.1")
+    lb = bind_listener("127.0.0.1")
+    eps = [("127.0.0.1", la.getsockname()[1]),
+           ("127.0.0.1", lb.getsockname()[1])]
+    a = SocketComm(2, 0, eps, la, epoch=epoch_a)
+    b = SocketComm(2, 1, eps, lb, epoch=epoch_b)
+    return a, b
+
+
+class TestSocketElastic:
+    def test_stale_hello_is_refused(self):
+        a, b = _socket_pair(epoch_a=0, epoch_b=1)
+        before = metrics.counter("elastic.stale_hellos").value
+        try:
+            a.send(1, "t", np.arange(4.0))  # HELLO carries epoch 0
+            deadline = time.monotonic() + 5
+            while b._stale_hellos == 0 and time.monotonic() < deadline:
+                time.sleep(0.02)
+            assert b._stale_hellos >= 1
+            assert metrics.counter("elastic.stale_hellos").value > before
+            # the record behind the refused HELLO never matched
+            assert b.pending_snapshot() == []
+        finally:
+            a.finalize()
+            b.finalize()
+
+    def test_send_redials_through_dead_connection(self):
+        a, b = _socket_pair()
+        before = metrics.counter("elastic.socket_redials").value
+        try:
+            a.send(1, "t", np.arange(3.0))
+            np.testing.assert_array_equal(b.recv(0, "t"), np.arange(3.0))
+            # sever the cached connection out from under the sender: the
+            # next send must notice, redial, and re-send the record
+            with a._peers_guard:
+                a._peers[1].close()
+            a.send(1, "t", np.arange(3.0) * 2)
+            np.testing.assert_array_equal(b.recv(0, "t"), np.arange(3.0) * 2)
+            assert metrics.counter("elastic.socket_redials").value > before
+            assert a.dead_ranks() == []  # recovered: no longer dead
+        finally:
+            a.finalize()
+            b.finalize()
+
+    def test_send_reaches_restarted_peer_via_refresh_hook(self):
+        a, b = _socket_pair()
+        try:
+            a.send(1, "t", np.float64(1.0))
+            assert b.recv(0, "t") == 1.0
+            b.finalize()  # rank 1 dies
+            # ...and is relaunched as epoch 1 on a fresh ephemeral port
+            lb2 = bind_listener("127.0.0.1")
+            eps2 = [a.endpoints[0], ("127.0.0.1", lb2.getsockname()[1])]
+            b2 = SocketComm(2, 1, eps2, lb2, epoch=1)
+            try:
+                a._refresh_endpoint = (
+                    lambda d: eps2[1] if d == 1 else None
+                )
+                a.epoch_reset(1, epoch=1)  # survivor fences to epoch 1
+                a.send(1, "t", np.float64(2.0))  # seq restarts at 0
+                assert b2.recv(0, "t") == 2.0
+            finally:
+                b2.finalize()
+        finally:
+            a.finalize()
+
+    def test_epoch_reset_clears_only_that_peers_streams(self):
+        a, b = _socket_pair()
+        try:
+            a.send(1, "x", 1)
+            a._recv_seq[(1, "x")] = 3
+            a._send_seq[(0, "y")] = 5  # self-stream: another peer's state
+            a.epoch_reset(1, epoch=2)
+            assert a.epoch == 2
+            assert not any(k[0] == 1 for k in a._send_seq)
+            assert not any(k[0] == 1 for k in a._recv_seq)
+            assert a._send_seq[(0, "y")] == 5
+        finally:
+            a.finalize()
+            b.finalize()
+
+
+# ---------------------------------------------------------------------------
+# shm transport: heartbeat staleness + arena re-attach
+# ---------------------------------------------------------------------------
+
+
+class TestShmElastic:
+    def _mk(self, tmpdir, pid, epoch=0, heartbeat=True):
+        return ShmComm(
+            2, pid, tmpdir, arena_bytes=65536, nonce="elastic-test",
+            epoch=epoch, heartbeat=heartbeat, heartbeat_period=0.05,
+        )
+
+    def test_survivor_reattaches_to_restarted_peers_arena(self, tmp_path):
+        import tempfile
+
+        d = tempfile.mkdtemp(prefix="pp_elastic_", dir=shm_base_dir())
+        a = self._mk(d, 0)
+        b = self._mk(d, 1)
+        before = metrics.counter("elastic.arena_reattach").value
+        try:
+            a.send(1, "t", np.arange(4.0))
+            np.testing.assert_array_equal(b.recv(0, "t"), np.arange(4.0))
+            b.finalize()  # the owner stops beating its inbound arenas
+            time.sleep(0.35)  # > 4 * heartbeat_period: evidence of death
+            assert a.dead_ranks() == [1]
+            # the relaunched incarnation recreates its arenas (same
+            # nonce, bumped epoch) — next send must detect the stale
+            # mapping, re-attach, and restart the stream at seq 0
+            b2 = self._mk(d, 1, epoch=1)
+            try:
+                a.send(1, "t2", np.arange(5.0))
+                np.testing.assert_array_equal(
+                    b2.recv(0, "t2"), np.arange(5.0)
+                )
+                assert (metrics.counter("elastic.arena_reattach").value
+                        > before)
+                assert a.dead_ranks() == []  # the new owner is beating
+            finally:
+                b2.finalize()
+        finally:
+            a.finalize()
+            import shutil
+
+            shutil.rmtree(d, ignore_errors=True)
+
+    def test_paused_owner_is_not_falsely_reattached(self, tmp_path):
+        """Staleness needs BOTH a dead heartbeat and a bumped epoch on
+        disk — a merely slow owner (stale heartbeat, same epoch) must
+        keep its arena and lose no messages."""
+        import shutil
+        import tempfile
+
+        d = tempfile.mkdtemp(prefix="pp_elastic_", dir=shm_base_dir())
+        a = self._mk(d, 0)
+        b = self._mk(d, 1, heartbeat=False)  # "paused": never beats
+        try:
+            a.send(1, "t", np.float64(7.0))
+            assert b.recv(0, "t") == 7.0
+            time.sleep(0.35)  # heartbeat now stale from a's view
+            arena_before = a._out[1]
+            a.send(1, "t", np.float64(8.0))  # disk epoch unchanged: keep
+            assert a._out[1] is arena_before
+            assert b.recv(0, "t") == 8.0
+        finally:
+            a.finalize()
+            b.finalize()
+            shutil.rmtree(d, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# unified liveness diagnostics
+# ---------------------------------------------------------------------------
+
+
+class TestLivenessDiagnostics:
+    def test_straggler_message_carries_dead_and_pending(self):
+        class Diag:
+            pid = 0
+
+            def dead_ranks(self):
+                return [2]
+
+            def pending_snapshot(self, limit=8):
+                return [(1, "grad", 0)]
+
+        msg = straggler_message(
+            Diag(), "'loss' (seq 3) from rank 1", "test-fabric",
+            extra="; last wire error: boom",
+        )
+        assert "rank 0 timed out receiving 'loss' (seq 3) from rank 1" in msg
+        assert "over test-fabric" in msg
+        assert "stale-heartbeat ranks: [2]" in msg
+        assert "pending unclaimed (src, tag, seq) matches: [(1, 'grad', 0)]" in msg
+        assert msg.endswith("; last wire error: boom")
+        assert metrics.gauge("liveness.dead_ranks").value == 1.0
+
+    def test_straggler_message_survives_broken_diagnostics(self):
+        class Broken:
+            pid = 3
+
+            def dead_ranks(self):
+                raise RuntimeError("probe failed")
+
+        msg = straggler_message(Broken(), "'x' from rank 0", "TCP")
+        assert "stale-heartbeat ranks: []" in msg
+
+    def test_filempi_pending_snapshot_lists_unclaimed_files(self, tmp_path):
+        tx = FileMPI(2, 0, tmp_path, heartbeat=False)
+        rx = FileMPI(2, 1, tmp_path, heartbeat=False)
+        try:
+            tx.send(1, "orphan", np.arange(3.0))
+            snap = rx.pending_snapshot()
+            assert snap and snap[0].startswith("m_s0_d1_")
+            assert tx.pending_snapshot() == []
+        finally:
+            tx.finalize()
+            rx.finalize()
+
+    def test_filempi_epoch_token_separates_generations(self, tmp_path):
+        tx = FileMPI(2, 0, tmp_path, heartbeat=False, epoch=1)
+        rx0 = FileMPI(2, 1, tmp_path, heartbeat=False, epoch=0)
+        rx1 = FileMPI(2, 1, tmp_path, heartbeat=False, epoch=1)
+        try:
+            tx.send(1, "t", np.float64(5.0))
+            names = rx1.pending_snapshot()
+            assert names and "E1_" in names[0]
+            # the dead generation's receiver can never claim it
+            with pytest.raises(StragglerTimeout):
+                rx0.recv(0, "t", timeout=0.2)
+            assert rx1.recv(0, "t") == 5.0
+        finally:
+            tx.finalize()
+            rx0.finalize()
+            rx1.finalize()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint durability + elastic resume
+# ---------------------------------------------------------------------------
+
+
+def _tree(v):
+    return {"x": np.arange(6.0) * v}
+
+
+class TestCheckpointDurability:
+    def _torn(self, tmp_path, breakage):
+        mgr = CheckpointManager(tmp_path, keep=10)
+        mgr.save(1, {"state": _tree(1.0)})
+        mgr.save(2, {"state": _tree(2.0)})
+        breakage(tmp_path / "step-00000002")
+        return mgr
+
+    def test_discovery_skips_torn_manifest(self, tmp_path):
+        mgr = self._torn(
+            tmp_path, lambda d: (d / "manifest.json").write_text("{ torn")
+        )
+        assert mgr.list_steps() == [1, 2]      # still visible...
+        assert mgr.list_steps(valid_only=True) == [1]
+        assert mgr.latest_step() == 1          # ...but never resumed from
+        with pytest.raises(Exception):
+            mgr.restore(step=2)  # explicit restore stays loud
+
+    def test_discovery_skips_missing_segment(self, tmp_path):
+        def rm_segment(d):
+            with open(d / "manifest.json") as f:
+                manifest = json.load(f)
+            entries = next(iter(manifest["trees"].values()))
+            seg = next(iter(entries.values()))["segments"][0]
+            (d / seg["file"]).unlink()
+
+        mgr = self._torn(tmp_path, rm_segment)
+        assert mgr.latest_step() == 1
+
+    def test_discovery_skips_size_mismatch(self, tmp_path):
+        def truncate_segment(d):
+            with open(d / "manifest.json") as f:
+                manifest = json.load(f)
+            entries = next(iter(manifest["trees"].values()))
+            seg = next(iter(entries.values()))["segments"][0]
+            with open(d / seg["file"], "ab") as f:
+                f.write(b"\0" * 7)  # torn/corrupt shard: size disagrees
+
+        mgr = self._torn(tmp_path, truncate_segment)
+        assert "nbytes" in json.loads(
+            (tmp_path / "step-00000002" / "manifest.json").read_text()
+        )["trees"]["state"]["x"]["segments"][0]
+        assert mgr.latest_step() == 1
+
+    def test_save_fsyncs_shards_and_manifest(self, tmp_path, monkeypatch):
+        import repro.train.checkpoint as ckpt
+
+        synced = []
+        real = ckpt.os.fsync
+        monkeypatch.setattr(
+            ckpt.os, "fsync", lambda fd: (synced.append(fd), real(fd))[1]
+        )
+        mgr = CheckpointManager(tmp_path)
+        mgr.save(1, {"state": _tree(1.0)})
+        # at least one shard, the manifest, the step dir, and the parent
+        assert len(synced) >= 4
+        assert mgr.latest_step() == 1
+
+    def test_elastic_resume_step(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        assert elastic_resume_step(mgr) is None
+        mgr.save(3, {"state": _tree(1.0)})
+        assert elastic_resume_step(mgr) == 3
+
+        class FakeCtx:
+            np_ = 2
+
+            def __init__(self, peer):
+                self.peer = peer
+
+            def allgather(self, obj, tag=None):
+                return [obj, self.peer]
+
+        # the consistent recovery line is the min over all ranks
+        assert elastic_resume_step(mgr, FakeCtx(5)) == 3
+        assert elastic_resume_step(mgr, FakeCtx(1)) == 1
+        # any rank with no valid checkpoint drags the world to scratch
+        assert elastic_resume_step(mgr, FakeCtx(-1)) is None
+
+
+# ---------------------------------------------------------------------------
+# end to end: kill a rank mid-run on every transport, demand bitwise equality
+# ---------------------------------------------------------------------------
+
+
+def _expected_state(np_, steps=6):
+    """The unfaulted ``elastic_allreduce`` result, replayed exactly."""
+    state = np.zeros(8)
+    for step in range(steps):
+        for r in range(np_):
+            state = state + (np.arange(8.0) + 1.0) * float(
+                (r + 1) * (step + 1)
+            )
+    return state
+
+
+class TestElasticEndToEnd:
+    def test_unfaulted_baseline_matches_replay(self, tmp_path, monkeypatch):
+        from repro.launch import pRUN
+
+        monkeypatch.delenv("PPYTHON_FAULT", raising=False)
+        res = pRUN(
+            "repro.launch._selftest:elastic_allreduce", 2,
+            transport="file", timeout=120,
+            env={"PPYTHON_ELASTIC_CKPT": str(tmp_path)},
+        )
+        want = _expected_state(2).tolist()
+        for state, epoch in res:
+            assert state == want
+            assert epoch == 0
+
+    @pytest.mark.parametrize("transport,np_,kwargs", [
+        ("file", 2, {}),
+        ("socket", 2, {}),
+        ("shm", 2, {}),
+        ("hier", 4, {"nodes": 2}),  # shm within node pairs, TCP across
+    ])
+    def test_faulted_run_completes_bitwise_equal(
+        self, transport, np_, kwargs, tmp_path, monkeypatch
+    ):
+        """Seeded rank-kill mid-run + ``restarts=1``: the gang restart
+        resumes from the last common checkpoint and the final state is
+        bitwise-equal to an unfaulted run's (deterministic replay)."""
+        from repro.launch import pRUN
+
+        monkeypatch.delenv("PPYTHON_FAULT", raising=False)
+        restarts_before = metrics.counter("elastic.restarts").value
+        res = pRUN(
+            "repro.launch._selftest:elastic_allreduce", np_,
+            transport=transport, restarts=1, timeout=180,
+            env={
+                "PPYTHON_ELASTIC_CKPT": str(tmp_path),
+                "PPYTHON_FAULT": "kill:rank=1,after_sends=2",
+            },
+            **kwargs,
+        )
+        want = _expected_state(np_).tolist()
+        for state, epoch in res:
+            assert state == want
+            assert epoch == 1  # every rank finished in the restarted world
+        assert metrics.counter("elastic.restarts").value > restarts_before

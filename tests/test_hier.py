@@ -286,12 +286,14 @@ class TestPRunHier:
             pRUN("repro.launch._selftest:pingpong", 2, transport="socket",
                  nodes=2)
 
-    def test_hier_rejects_restarts(self):
+    def test_hier_gang_restart_completes(self):
+        """restarts= now works on the hier transport: both inner fabrics
+        come back under the bumped epoch after a gang restart."""
         from repro.launch import pRUN
 
-        with pytest.raises(ValueError, match="restart"):
-            pRUN("repro.launch._selftest:pingpong", 2, transport="hier",
-                 restarts=1)
+        res = pRUN("repro.launch._selftest:crash_once_pingpong", 2,
+                   transport="hier", nodes=2, restarts=1, timeout=120.0)
+        assert res[0] == np.arange(1000.0).sum() * 2
 
 
 class TestSlurmTemplate:

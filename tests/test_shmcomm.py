@@ -333,9 +333,13 @@ class TestPRunShm:
                  transport="shm", timeout=120.0)
         assert _shm_dirs() == before
 
-    def test_shm_rejects_restarts(self):
+    def test_shm_gang_restart_completes(self):
+        """restarts= now works on the shm transport: rank 1 dies in
+        epoch 0, the launcher gang-restarts the world under epoch 1 with
+        a fresh arena nonce (the dead generation's rings are inert), and
+        the relaunched pingpong completes."""
         from repro.launch import pRUN
 
-        with pytest.raises(ValueError, match="restart"):
-            pRUN("repro.launch._selftest:pingpong", 2, transport="shm",
-                 restarts=1)
+        res = pRUN("repro.launch._selftest:crash_once_pingpong", 2,
+                   transport="shm", restarts=1, timeout=120.0)
+        assert res[0] == float(np.arange(1000.0).sum() * 2)

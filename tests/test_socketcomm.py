@@ -320,12 +320,16 @@ class TestPRunTransports:
         with pytest.raises(ValueError, match="module:function"):
             pRUN(str(script), 2, transport="thread")
 
-    def test_socket_rejects_restarts(self):
+    def test_socket_gang_restart_completes(self):
+        """restarts= now works on the socket transport: rank 1 dies in
+        epoch 0, the launcher gang-restarts the world under epoch 1 (the
+        multi-generation rendezvous re-serves fresh endpoints), and the
+        relaunched pingpong completes."""
         from repro.launch import pRUN
 
-        with pytest.raises(ValueError, match="rendezvous"):
-            pRUN("repro.launch._selftest:pingpong", 2, transport="socket",
-                 restarts=1)
+        res = pRUN("repro.launch._selftest:crash_once_pingpong", 2,
+                   transport="socket", restarts=1, timeout=120)
+        assert res[0] == np.arange(1000.0).sum() * 2
 
     def test_scratch_dir_removed_on_success_kept_on_failure(self, capsys):
         import glob
