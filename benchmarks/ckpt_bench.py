@@ -1,0 +1,212 @@
+"""Checkpoint resharding benchmark: FALLS restore vs gather-and-rescatter.
+
+A checkpoint saved by ``save_sharded`` on one grid is restored onto a
+*different* grid (np=2 -> 4 and np=4 -> 2) two ways:
+
+* ``reshard``          — ``restore_resharded``: every rank mmap-reads
+  exactly the FALLS intersection of the saved segments with its owned
+  region under the new map.  Parallel across ranks, no messages, no
+  global-array buffer anywhere.
+* ``gather_rescatter`` — the pre-resharding strategy: rank 0 assembles
+  the full global array from the shard files (sequential
+  ``reshard_read``), then a redistribution scatters it to the new grid
+  over the transport.
+
+Every mode is oracle-checked (restored trees must be bitwise-equal to
+the saved field and to a same-grid restore), and the restore-side
+metrics (``ckpt.peak_buffer_bytes``, ``ckpt.files_opened``,
+``ckpt.read_bytes``) are recorded per row — the acceptance bar is not
+just "faster" but *no rank ever allocated a global-array buffer*.
+Results land in ``BENCH_ckpt.json`` via the shared bench-JSON helper.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/ckpt_bench.py [--rows 4096]
+        [--cols 512] [--repeats 5] [--out BENCH_ckpt.json] [--check]
+    PYTHONPATH=src python benchmarks/ckpt_bench.py --smoke   # CI mode
+
+``--check`` enforces the >= 2x speedup bar in both directions plus the
+peak-allocation bound; ``--smoke`` runs tiny shapes and only the
+correctness oracles (shared CI runners are too noisy for perf bars).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.comm import get_context, run_spmd
+from repro.core import Dmap
+from repro.core.dmat import Dmat
+from repro.core.ops import agg
+from repro.core.redist import redistribute
+from repro.obs import metrics
+from repro.train.checkpoint import CheckpointManager, reshard_read
+
+sys.path.insert(0, str(Path(__file__).parent))
+from bench_json import bench_record, write_bench_json  # noqa: E402
+
+SPEEDUP_BAR = 2.0
+
+
+def global_field(rows: int, cols: int) -> np.ndarray:
+    return (np.arange(rows, dtype=np.float64)[:, None] * cols
+            + np.arange(cols, dtype=np.float64)[None, :] + 1.0)
+
+
+def save_body(ckpt_dir: str, rows: int, cols: int):
+    """Collective sharded save of the deterministic field at step 0."""
+    ctx = get_context()
+    m = Dmap([ctx.np_, 1], {}, range(ctx.np_))
+    x = Dmat((rows, cols), m, ctx=ctx)
+    loc = x.local_view_owned()
+    if loc.size:
+        r, c = np.meshgrid(x.owned_indices(0), x.owned_indices(1),
+                           indexing="ij")
+        loc[...] = r * cols + c + 1.0
+    CheckpointManager(ckpt_dir).save_sharded(0, {"state": {"x": x}}, ctx)
+
+
+def restore_body(ckpt_dir: str, dst_np: int, mode: str, rows: int, cols: int):
+    """Timed restore under a [dst_np, 1] map; returns (seconds, global).
+
+    The global array (``agg`` outside the timed window) comes back on
+    rank 0 only — the oracle compares it in the driver."""
+    ctx = get_context()
+    mgr = CheckpointManager(ckpt_dir)
+    m = Dmap([dst_np, 1], {}, range(dst_np))
+    ctx.barrier(tag="__bench_t0")
+    t0 = time.perf_counter()
+    if mode == "reshard":
+        _, trees, _ = mgr.restore_resharded(0, ctx, m)
+        x = trees["state"]["x"]
+    else:  # gather_rescatter baseline
+        step_dir = Path(ckpt_dir) / "step-00000000"
+        root_map = Dmap([1, 1], {}, [0])
+        src = Dmat((rows, cols), root_map, ctx=ctx)
+        if ctx.pid == 0:
+            with open(step_dir / "manifest.json") as f:
+                manifest = json.load(f)
+            entry = manifest["trees"]["state"]["x"]
+            src.local_view_owned()[...] = reshard_read(step_dir, entry)
+        x = Dmat((rows, cols), m, ctx=ctx)
+        redistribute(x, src)
+    ctx.barrier(tag="__bench_t1")
+    dt = time.perf_counter() - t0
+    g = agg(x, root=0)
+    return dt, g
+
+
+def run_direction(src_np: int, dst_np: int, rows: int, cols: int,
+                  repeats: int) -> tuple[list[dict], float]:
+    """Bench one save-grid -> restore-grid pair; returns (rows, speedup)."""
+    G = global_field(rows, cols)
+    ckpt_dir = tempfile.mkdtemp(prefix="ppython_ckpt_bench_")
+    out_rows: list[dict] = []
+    try:
+        run_spmd(save_body, src_np, args=(ckpt_dir, rows, cols))
+
+        # same-grid restore is the bitwise reference the resharded
+        # restores must match
+        ref = run_spmd(restore_body, src_np,
+                       args=(ckpt_dir, src_np, "reshard", rows, cols))
+        ref_g = ref[0][1]
+        assert np.array_equal(ref_g, G), "same-grid restore diverged"
+
+        best = {}
+        for mode in ("reshard", "gather_rescatter"):
+            best_dt = float("inf")
+            peak = files = rbytes = 0
+            for _ in range(repeats):
+                metrics.reset()
+                res = run_spmd(restore_body, dst_np,
+                               args=(ckpt_dir, dst_np, mode, rows, cols))
+                dt = max(r[0] for r in res)
+                g = res[0][1]
+                assert np.array_equal(g, G) and np.array_equal(g, ref_g), (
+                    f"{mode} {src_np}->{dst_np} restore not bitwise-equal")
+                best_dt = min(best_dt, dt)
+                peak = int(metrics.gauge("ckpt.peak_buffer_bytes").value)
+                files = metrics.counter("ckpt.files_opened").value
+                rbytes = metrics.counter("ckpt.read_bytes").value
+            if mode == "reshard" and dst_np > 1:
+                # the tentpole invariant: no rank ever held the global
+                assert peak < G.nbytes, (
+                    f"reshard restore allocated {peak} bytes "
+                    f">= global {G.nbytes}")
+            best[mode] = best_dt
+            out_rows.append({
+                "direction": f"{src_np}->{dst_np}",
+                "mode": mode,
+                "seconds": round(best_dt, 6),
+                "global_bytes": int(G.nbytes),
+                "peak_buffer_bytes": peak,
+                "files_opened": int(files),
+                "read_bytes": int(rbytes),
+            })
+        speedup = best["gather_rescatter"] / best["reshard"]
+        print(f"  {src_np}->{dst_np}: reshard {best['reshard']*1e3:.2f} ms, "
+              f"gather+rescatter {best['gather_rescatter']*1e3:.2f} ms "
+              f"({speedup:.2f}x)")
+        return out_rows, speedup
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--rows", type=int, default=4096)
+    ap.add_argument("--cols", type=int, default=512)
+    ap.add_argument("--repeats", type=int, default=5,
+                    help="best-of repeats per mode")
+    ap.add_argument("--out", default="BENCH_ckpt.json")
+    ap.add_argument("--check", action="store_true",
+                    help=f"enforce the >= {SPEEDUP_BAR}x bar both ways")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: tiny shapes, correctness oracles only")
+    args = ap.parse_args()
+
+    rows, cols, repeats = args.rows, args.cols, args.repeats
+    if args.smoke:
+        rows, cols, repeats = 256, 64, 2
+
+    all_rows: list[dict] = []
+    speedups: dict[str, float] = {}
+    for src_np, dst_np in ((2, 4), (4, 2)):
+        r, s = run_direction(src_np, dst_np, rows, cols, repeats)
+        all_rows.extend(r)
+        speedups[f"speedup_{src_np}to{dst_np}"] = round(s, 2)
+
+    record = bench_record(
+        "ckpt_reshard", all_rows,
+        rows_cols=[rows, cols],
+        repeats=repeats,
+        speedup_bar=SPEEDUP_BAR,
+        smoke=bool(args.smoke),
+        **speedups,
+    )
+    if not args.smoke:
+        write_bench_json(args.out, record)
+
+    if args.check and not args.smoke:
+        bad = {k: v for k, v in speedups.items() if v < SPEEDUP_BAR}
+        if bad:
+            print(f"FAIL: below the {SPEEDUP_BAR}x bar: {bad}")
+            return 1
+        print(f"check OK: {speedups} (bar {SPEEDUP_BAR}x, "
+              "bitwise oracles + peak-alloc bound passed)")
+    elif args.smoke:
+        print(f"smoke OK: {speedups} (oracles + peak-alloc bound passed; "
+              "no perf bar on shared runners)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,7 +7,7 @@ bootstrap protocol with two interchangeable backends:
 
 * **TCP rendezvous server** (``PPYTHON_RDZV_ADDR=host:port``): rank 0
   binds the advertised address and collects one registration record
-  ``(pid, host, port)`` per peer; once all ``np`` ranks are in, it sends
+  ``(pid, epoch, world, endpoint)`` per peer; once all ``np`` ranks are in, it sends
   the complete table back down every connection.  Non-zero ranks
   dial-with-retry (rank 0 may not be up yet), register, and block for
   the table.  This is the shared-filesystem-free path: the only thing a
@@ -119,14 +119,24 @@ def _recv_exact(sock: socket.socket, n: int) -> bytes:
     return bytes(buf)
 
 
-def _parse_registration(rec) -> tuple[int, int, tuple]:
-    """``(pid, epoch, endpoint)`` from a registration record; the legacy
-    two-field form ``(pid, endpoint)`` is read as epoch 0."""
+def _parse_registration(rec) -> tuple[int, int, int | None, tuple]:
+    """``(pid, epoch, world, endpoint)`` from a registration record.
+
+    Current ranks register the four-field form — the world size rides
+    along so an elastic gang restart (``pRUN(elastic_np=...)``) can
+    relaunch at a *different* size and the multi-generation server sizes
+    each epoch's table from its own registrants.  The legacy forms are
+    still read: ``(pid, endpoint)`` as epoch 0, ``(pid, epoch,
+    endpoint)`` without a world (the server falls back to its configured
+    size)."""
     if len(rec) == 2:
         peer, ep = rec
-        return int(peer), 0, tuple(ep)
-    peer, epoch, ep = rec
-    return int(peer), int(epoch), tuple(ep)
+        return int(peer), 0, None, tuple(ep)
+    if len(rec) == 3:
+        peer, epoch, ep = rec
+        return int(peer), int(epoch), None, tuple(ep)
+    peer, epoch, world, ep = rec
+    return int(peer), int(epoch), int(world), tuple(ep)
 
 
 def serve_endpoint_table(
@@ -172,13 +182,17 @@ def serve_endpoint_table(
             # healthy rank redials and re-registers
             conn.settimeout(min(2.0, max(0.5, deadline - time.monotonic())))
             try:
-                peer, rec_epoch, ep = _parse_registration(_recv_rec(conn))
+                peer, rec_epoch, world, ep = _parse_registration(
+                    _recv_rec(conn))
             except (socket.timeout, ConnectionError, OSError, ValueError,
                     TypeError):
                 conn.close()
                 continue
             if rec_epoch != epoch:
                 conn.close()  # stale-generation ghost (or too-new rank)
+                continue
+            if (world is not None and world != np_) or not 0 <= peer < np_:
+                conn.close()  # registrant from a different-sized world
                 continue
             table[peer] = tuple(ep)
             conns.append(conn)
@@ -200,9 +214,15 @@ def serve_generations(srv: socket.socket, np_: int, deadline: float) -> None:
     registrants and cached (a rank whose table read raced a drop redials
     and is answered from the cache).  A ghost registering under a dead
     epoch sits in a forever-incomplete table and is never answered —
-    exactly the fence the restart design needs.  Returns when ``srv`` is
-    closed; raises ``StragglerTimeout`` if any generation is still
-    incomplete at ``deadline``."""
+    exactly the fence the restart design needs.
+
+    Each generation's table is sized from its registrants' *own* world
+    field (``np_`` is only the fallback for legacy records), so an
+    elastic restart may relaunch at a different world size
+    (``pRUN(elastic_np=...)``) and the same listener serves it;
+    registrants of one epoch disagreeing about the world are dropped.
+    Returns when ``srv`` is closed; raises ``StragglerTimeout`` if any
+    generation is still incomplete at ``deadline``."""
     srv.settimeout(0.5)
     tables: dict[int, list] = {}
     waiting: dict[int, list[socket.socket]] = {}
@@ -226,7 +246,7 @@ def serve_generations(srv: socket.socket, np_: int, deadline: float) -> None:
                 return  # listener closed: the job is over
             conn.settimeout(min(2.0, max(0.5, deadline - time.monotonic())))
             try:
-                peer, epoch, ep = _parse_registration(_recv_rec(conn))
+                peer, epoch, world, ep = _parse_registration(_recv_rec(conn))
             except (socket.timeout, ConnectionError, OSError, ValueError,
                     TypeError):
                 conn.close()
@@ -238,13 +258,14 @@ def serve_generations(srv: socket.socket, np_: int, deadline: float) -> None:
                     pass
                 conn.close()
                 continue
-            table = tables.setdefault(epoch, [None] * np_)
-            if not (0 <= peer < np_):
-                conn.close()
+            table = tables.setdefault(epoch, [None] * (world or np_))
+            if (world is not None and world != len(table)) \
+                    or not 0 <= peer < len(table):
+                conn.close()  # world-size disagreement within one epoch
                 continue
             table[peer] = tuple(ep)
             waiting.setdefault(epoch, []).append(conn)
-            if sum(e is not None for e in table) == np_:
+            if sum(e is not None for e in table) == len(table):
                 for c in waiting.pop(epoch, []):
                     try:
                         _send_rec(c, table)
@@ -309,7 +330,7 @@ def rendezvous_tcp(
         try:
             sock.settimeout(max(0.5, deadline - time.monotonic()))
             sock.connect((host, port))
-            _send_rec(sock, (pid, epoch, tuple(endpoint)))
+            _send_rec(sock, (pid, epoch, np_, tuple(endpoint)))
             sock.settimeout(max(0.5, deadline - time.monotonic()))
             table = _recv_rec(sock)
             break

@@ -175,6 +175,32 @@ class Dmap:
             )
         return (fs[0].l, fs[0].r + 1)
 
+    # -- serialization ------------------------------------------------------
+
+    def to_json(self) -> dict:
+        """JSON-safe description of this map (checkpoint manifests).
+
+        The inverse is :meth:`from_json`; the round trip is exact
+        (``Dmap.from_json(m.to_json()) == m``) because ``parse_dist``
+        re-parses its own canonical ``(kind, block)`` tuples."""
+        return {
+            "grid": list(self.grid),
+            "dist": [[kind, int(b)] for kind, b in self.dist],
+            "proclist": list(self.proclist),
+            "overlap": list(self.overlap),
+            "order": self.order,
+        }
+
+    @classmethod
+    def from_json(cls, spec: dict) -> "Dmap":
+        return cls(
+            spec["grid"],
+            [tuple(d) for d in spec["dist"]],
+            proclist=spec["proclist"],
+            overlap=spec.get("overlap"),
+            order=spec.get("order", "row"),
+        )
+
     # -- misc ---------------------------------------------------------------
 
     @property

@@ -75,6 +75,9 @@ __all__ = [
     "clear_plan_cache",
     "owned_indices_cached",
     "halo_extents_cached",
+    "segment_intersection",
+    "owned_segment_positions",
+    "as_basic_index",
 ]
 
 
@@ -502,6 +505,88 @@ def _positions(owned: np.ndarray, gidx: np.ndarray, dim: int, pid: int) -> np.nd
             f"global indices not owned by rank {pid} along dim {dim}"
         )
     return pos
+
+
+# ---------------------------------------------------------------------------
+# Disk-layout intersection (checkpoint resharding)
+# ---------------------------------------------------------------------------
+#
+# A checkpoint shard on disk is one more FALLS-described index set: the
+# same algebra that plans live redistribution decides which bytes of
+# which file a rank must read when it restores under a *different* map.
+# The checkpoint layer (train/checkpoint.py) routes through these
+# helpers so disk resharding and Dmat redistribution share one index
+# path (DESIGN.md §4, §8).
+
+
+def segment_intersection(
+    want_falls: list[list], seg_falls: list[list]
+) -> tuple[tuple[np.ndarray, ...], tuple[np.ndarray, ...]] | None:
+    """Positions of ``want ∩ segment`` relative to each side, per dim.
+
+    Both arguments are per-dim ``list[FALLS]`` in *global* index space
+    (``want_falls`` the indices the reader wants in its output buffer,
+    ``seg_falls`` the indices one on-disk segment holds along its file
+    axes).  Returns ``(want_pos, file_pos)`` — per-dim int64 position
+    arrays into the want-side index list and the segment file — or
+    ``None`` when the intersection is empty along any dimension (the
+    file need not be opened at all)."""
+    want_pos, file_pos = [], []
+    for wf, sf in zip(want_falls, seg_falls):
+        inter = falls_list_intersect(wf, sf)
+        gidx = falls_list_indices(inter)
+        if gidx.size == 0:
+            return None
+        # inter ⊆ both sides, so searchsorted positions are exact
+        want_pos.append(np.searchsorted(falls_list_indices(wf), gidx))
+        file_pos.append(np.searchsorted(falls_list_indices(sf), gidx))
+    return tuple(want_pos), tuple(file_pos)
+
+
+def owned_segment_positions(
+    dmap: Dmap, shape: tuple[int, ...], pid: int, seg_falls: list[list]
+) -> tuple[tuple[np.ndarray, ...], tuple[np.ndarray, ...]] | None:
+    """Like :func:`segment_intersection` with the want side taken from
+    ``pid``'s owned indices under ``dmap`` — positions are validated
+    against the shared owned-index cache, so the returned ``local_pos``
+    indexes the rank's owned local storage (sorted-global order, halo
+    excluded) exactly as ``Dmat.local_view_owned`` stores it."""
+    if not dmap.inmap(pid):
+        return None
+    owned = owned_indices_cached(dmap, tuple(int(s) for s in shape), pid)
+    local_pos, file_pos = [], []
+    for d, sf in enumerate(seg_falls):
+        inter = falls_list_intersect(dmap.dim_falls(shape, d, pid), sf)
+        gidx = falls_list_indices(inter)
+        if gidx.size == 0:
+            return None
+        local_pos.append(_positions(owned[d], gidx, d, pid))
+        file_pos.append(np.searchsorted(falls_list_indices(sf), gidx))
+    return tuple(local_pos), tuple(file_pos)
+
+
+def as_basic_index(pos_tuple: tuple[np.ndarray, ...]):
+    """Per-dim position arrays -> an ndarray index for one read/write.
+
+    Evenly-strided dims lower to ``slice`` objects (on an
+    ``np.load(mmap_mode='r')`` array a slice read touches only the pages
+    it covers); if any dim stays ragged, every dim is promoted to
+    ``np.ix_`` outer-product form so mixed basic/advanced indexing
+    semantics never apply.  Empty tuple (scalar leaf) indexes as
+    ``arr[()]``."""
+    sls: list = []
+    ragged = False
+    for p in pos_tuple:
+        d = _lower_positions(np.asarray(p, dtype=np.int64))
+        if d[0] == "slice":
+            _, start, n, step = d
+            sls.append(slice(start, start + (n - 1) * step + 1, step))
+        else:
+            sls.append(None)
+            ragged = True
+    if not ragged:
+        return tuple(sls)
+    return np.ix_(*[np.asarray(p, dtype=np.intp) for p in pos_tuple])
 
 
 def _coalesce_enabled() -> bool:

@@ -103,6 +103,84 @@ def elastic_allreduce() -> tuple:
     return state.tolist(), run_epoch()
 
 
+def elastic_reshard() -> tuple:
+    """Elastic *resharding* e2e body: a Dmat train-state loop whose final
+    value is independent of the world size.
+
+    Each step adds a field defined purely by global index and step
+    number, applied by every rank to only its owned cells — so any grid
+    produces the same global array.  Steps checkpoint collectively into
+    ONE shared directory (``PPYTHON_ELASTIC_CKPT``) via ``save_sharded``.
+    Under ``PPYTHON_FAULT`` + ``pRUN(restarts=1, elastic_np=M)`` a rank
+    is killed and the gang relaunches at a *different* world size; the
+    relaunched ranks resume through ``restore_resharded`` under the new
+    world's map — the on-disk shards of the old grid land on the new one
+    via the FALLS intersection — and the run must finish bitwise-equal
+    to an unfaulted fixed-size run.  Returns ``(global_state, epoch,
+    world)`` with the state on rank 0 only."""
+    import os
+
+    from repro.comm.context import run_epoch
+    from repro.train.checkpoint import CheckpointManager, elastic_resume_step
+
+    ctx = get_context()
+    world = Np()
+    rows, cols = 13, 5
+    steps = 6
+    mgr = CheckpointManager(os.environ["PPYTHON_ELASTIC_CKPT"])
+    m = Dmap([world, 1], {}, range(world))
+    x = pp.zeros(rows, cols, map=m)
+    start = 0
+    resume = elastic_resume_step(mgr, ctx)
+    if resume is not None:
+        _, trees, _ = mgr.restore_resharded(resume, ctx, m)
+        x = trees["state"]["x"]
+        start = resume + 1
+    for step in range(start, steps):
+        loc = x.local_view_owned()
+        if loc.size:
+            r, c = np.meshgrid(
+                x.owned_indices(0), x.owned_indices(1), indexing="ij"
+            )
+            loc += (step + 1) * (r * cols + c + 1.0)
+        mgr.save_sharded(step, {"state": {"x": x}}, ctx)
+    full = pp.agg(x, root=0)
+    ctx.barrier()
+    return (None if full is None else full.tolist()), run_epoch(), world
+
+
+def ckpt_save(ckpt_dir: str, rows: str = "13", cols: str = "5") -> bool:
+    """Collective sharded save of the deterministic index field (the
+    cross-run half of the restore-matrix tests: a later pRUN at a
+    different world size restores it via ``ckpt_restore``)."""
+    from repro.train.checkpoint import CheckpointManager
+
+    ctx = get_context()
+    rows, cols = int(rows), int(cols)
+    m = Dmap([Np(), 1], {}, range(Np()))
+    x = pp.zeros(rows, cols, map=m)
+    loc = x.local_view_owned()
+    if loc.size:
+        r, c = np.meshgrid(x.owned_indices(0), x.owned_indices(1),
+                           indexing="ij")
+        loc[...] = r * cols + c + 1.0
+    CheckpointManager(ckpt_dir).save_sharded(0, {"state": {"x": x}}, ctx)
+    return True
+
+
+def ckpt_restore(ckpt_dir: str, dist: str = "b") -> list | None:
+    """Resharding restore under this (different-sized) world's map;
+    returns the aggregated global array on rank 0."""
+    from repro.train.checkpoint import CheckpointManager
+
+    ctx = get_context()
+    m = Dmap([Np(), 1], [dist, "b"], range(Np()))
+    _, trees, _ = CheckpointManager(ckpt_dir).restore_resharded(0, ctx, m)
+    full = pp.agg(trees["state"]["x"], root=0)
+    ctx.barrier()
+    return None if full is None else full.tolist()
+
+
 def crash_once_pingpong() -> float:
     """Elastic-restart body: rank 1 dies hard in epoch 0; the gang
     restart relaunches the world under epoch 1 (which doubles as the

@@ -146,6 +146,7 @@ def pRUN(
     comm_dir: str | os.PathLike | None = None,
     timeout: float = 600.0,
     restarts: int = 0,
+    elastic_np: int | None = None,
     env: dict[str, str] | None = None,
     collect_results: bool = True,
     nodes: int | None = None,
@@ -166,6 +167,16 @@ def pRUN(
     ``None`` inherits the environment.  Traced process workers merge
     their buffers at shutdown into one Chrome-trace JSON under
     ``PPYTHON_TRACE_DIR`` (see ``repro.obs``).
+
+    ``elastic_np`` (needs ``restarts > 0``) relaunches the gang at a
+    *different* world size after a fault: the restarted generation runs
+    ``elastic_np`` ranks under the bumped epoch, its rendezvous
+    registrations carry the new world size, and the workers are expected
+    to resume from checkpoints through
+    ``repro.train.checkpoint.restore_resharded`` — on-disk shards saved
+    by the old grid are redistributed onto the new one (scale-up or
+    -down) via the FALLS intersection algebra.  Results are collected
+    from the final generation's world.
     """
     transport = (transport or os.environ.get("PPYTHON_TRANSPORT")
                  or "file").lower()
@@ -179,6 +190,19 @@ def pRUN(
             f"nodes= partitions virtual nodes for transport='hier' only "
             f"(got transport={transport!r})"
         )
+    if elastic_np is not None:
+        if restarts <= 0:
+            raise ValueError(
+                "elastic_np= changes the world size on gang restart and "
+                "needs restarts > 0"
+            )
+        if elastic_np < 1:
+            raise ValueError(f"elastic_np must be >= 1, got {elastic_np}")
+        if transport == "thread":
+            raise ValueError(
+                "elastic_np= needs a process transport (thread worlds "
+                "have no gang restart)"
+            )
     if transport == "thread":
         return _run_threaded(target, np_, args, timeout, env)
 
@@ -284,12 +308,19 @@ def pRUN(
         from the latest checkpoint is deterministic — and the epoch
         fence (rendezvous registrations, socket HELLOs, arena headers,
         file-message names) guarantees no ghost of the dead generation
-        can ever talk to the new one."""
-        nonlocal epoch
+        can ever talk to the new one.
+
+        With ``elastic_np`` the relaunched generation runs at that world
+        size instead of the faulted one's: the new ranks register their
+        world size with the multi-generation rendezvous, and resume is
+        expected to reshard checkpoints onto the new grid
+        (``restore_resharded``)."""
+        nonlocal epoch, np_
         epoch += 1
+        new_np = np_ if elastic_np is None else elastic_np
         print(
             f"pRUN: rank {dead_pid} exited with code {rc}; gang-restarting "
-            f"all {np_} ranks as epoch {epoch} "
+            f"as epoch {epoch} with {new_np} rank(s) "
             f"({restarts_left} restart(s) left)",
             file=sys.stderr,
         )
@@ -299,6 +330,8 @@ def pRUN(
         for q in procs.values():
             q.wait()
         procs.clear()
+        np_ = new_np
+        base_env["PPYTHON_NP"] = str(np_)
         base_env["PPYTHON_EPOCH"] = str(epoch)
         if (transport in ("shm", "hier")
                 and "PPYTHON_SHM_NONCE" not in explicit_env):

@@ -3,18 +3,33 @@
 Layout (one directory per step, atomically published by rename)::
 
     ckpt/step-000042.tmp/...   -> ckpt/step-000042/
-        manifest.json          # per-leaf: global shape, dtype, segments
-        <leaf-path>__s<k>.npy  # one file per saved shard
+        manifest.json          # per-leaf: global shape, dtype, Dmap, segments
+        <leaf-path>__s<k>.npy  # one file per saved shard (jax / replicated)
+        <leaf-path>__r<p>.npy  # one file per rank (collective sharded save)
 
-Each saved segment records its per-dim half-open index ranges.  On restore
-the *new* topology's wanted ranges are intersected with the saved segments
-using the FALLS algebra — the paper's redistribution algorithm applied at
-the storage layer — so a job saved on 512 ranks restarts on 256 (or 8, or
-40) without any resharding pass: every host reads exactly the bytes it
-owns under the new Dmap (DESIGN.md §4, §8).
+Each saved segment records its index set — per-dim half-open ranges for
+contiguous shards, full FALLS families for cyclic/block-cyclic ones —
+and a sharded-saved leaf additionally records the ``Dmap`` it was
+partitioned under.  On restore the *new* topology's wanted index sets
+are intersected with the saved segments using the FALLS algebra — the
+paper's redistribution algorithm applied at the storage layer — so a job
+saved on 512 ranks restarts on 256 (or 8, or 40) with every host reading
+exactly the bytes it owns under the new map (``np.load(mmap_mode='r')``
+windows, never the global array; see docs/checkpoint-format.md and
+DESIGN.md §4, §8).  Residual cross-rank moves (restore roots that are
+not shared filesystems) route through the live transport as an ordinary
+``RedistPlan`` redistribution.
 
 ``CheckpointManager`` adds async writes (background thread), retention,
-and restart discovery for the fault-tolerant training loop.
+restart discovery, the collective :meth:`CheckpointManager.save_sharded`
+(one file per rank, out-of-band buffers) and the resharding
+:meth:`CheckpointManager.restore_resharded` for the fault-tolerant
+training loop; ``pRUN(restarts=N, elastic_np=M)`` + ``elastic_resume_step``
+relaunch a gang at a different world size and resume through it.
+
+bfloat16 leaves are stored as their raw uint16 bit patterns and widened
+bit-exactly to float32 on read (``u16 << 16`` reinterpreted), so the
+round trip needs neither ml_dtypes at read time nor a lossy cast.
 """
 
 from __future__ import annotations
@@ -25,14 +40,35 @@ import shutil
 import threading
 import time
 from pathlib import Path
-from typing import Any
+from typing import Any, Callable
 
 import numpy as np
 
-from ..core.pitfalls import FALLS, falls_intersect
+from ..core.dmap import Dmap
+from ..core.pitfalls import FALLS
+from ..core.redist import (
+    as_basic_index,
+    owned_segment_positions,
+    segment_intersection,
+)
+from ..obs import metrics as _metrics
 
 __all__ = ["CheckpointManager", "elastic_resume_step", "load_tree",
-           "reshard_read", "save_tree"]
+           "reshard_read", "restore_resharded", "save_tree"]
+
+# restore-side observability: the largest buffer any reader allocated
+# (the no-global-array assertion in benchmarks/ckpt_bench.py), plus
+# files-opened / bytes-read counters (the zero-intersection tests assert
+# a non-intersecting shard file is never even opened)
+_PEAK = _metrics.gauge("ckpt.peak_buffer_bytes")
+_FILES = _metrics.counter("ckpt.files_opened")
+_BYTES = _metrics.counter("ckpt.read_bytes")
+
+
+def _note_buffer(nbytes: int) -> None:
+    """Set-max: the gauge keeps the largest restore buffer seen."""
+    if nbytes > _PEAK.value:
+        _PEAK.set(nbytes)
 
 
 def _fsync_dir(path: Path) -> None:
@@ -78,6 +114,77 @@ def _unflatten(items: dict[str, Any]) -> dict:
     return root
 
 
+# ---------------------------------------------------------------------------
+# bfloat16: raw bit patterns on disk, exact widening on read
+# ---------------------------------------------------------------------------
+
+
+def _is_bf16(dtype_str: str) -> bool:
+    return dtype_str == "bfloat16"
+
+
+def _bf16_store(arr: np.ndarray) -> np.ndarray:
+    """uint16 bit-pattern view for writing (np.save of the ml_dtypes
+    dtype would degrade to an opaque ``|V2`` descr)."""
+    return np.ascontiguousarray(arr).view(np.uint16)
+
+
+def _bf16_widen(bits: np.ndarray) -> np.ndarray:
+    """bfloat16 bits -> float32, bit-exact (bf16 is f32's top half)."""
+    return (bits.astype(np.uint32) << 16).view(np.float32)
+
+
+def _open_shard(path: Path, bf16: bool) -> np.ndarray:
+    """mmap a shard file; bf16 shards present as uint16 bits (also
+    reinterprets legacy ``|V2`` files written before the uint16 era)."""
+    _FILES.inc()
+    mm = np.load(path, mmap_mode="r")
+    if bf16 and mm.dtype != np.uint16:
+        mm = mm.view(np.uint16)
+    return mm
+
+
+# ---------------------------------------------------------------------------
+# Segment index encoding
+# ---------------------------------------------------------------------------
+
+
+def _falls_encode(fs: list[FALLS]) -> list[list[int]]:
+    return [[int(f.l), int(f.r), int(f.s), int(f.n)] for f in fs]
+
+
+def _segment_falls(seg: dict) -> list[list[FALLS]]:
+    """A segment's per-dim global index set, whichever encoding it uses:
+    ``"falls"`` (general, written by save_sharded) or the legacy
+    contiguous ``"index"`` ``[start, stop)`` pairs."""
+    if "falls" in seg:
+        return [[FALLS(*map(int, f)) for f in dim] for dim in seg["falls"]]
+    return [
+        [FALLS(s, e - 1, max(e - s, 1), 1)] if e > s else []
+        for s, e in seg["index"]
+    ]
+
+
+def _read_segment_positions(
+    step_dir: Path, seg: dict, file_pos: tuple, bf16: bool
+) -> np.ndarray:
+    """Read exactly ``file_pos`` from one shard file (mmap window)."""
+    mm = _open_shard(step_dir / seg["file"], bf16)
+    data = mm[as_basic_index(file_pos)]
+    n = 1
+    for p in file_pos:
+        n *= len(p)
+    _BYTES.inc(n * mm.dtype.itemsize)
+    if bf16:
+        data = _bf16_widen(np.asarray(data))
+    return data
+
+
+# ---------------------------------------------------------------------------
+# Save
+# ---------------------------------------------------------------------------
+
+
 def _leaf_segments(leaf) -> list[tuple[np.ndarray, list[list[int]]]]:
     """(data, per-dim [start, stop]) for each locally-held shard."""
     shards = getattr(leaf, "addressable_shards", None)
@@ -103,23 +210,28 @@ def _leaf_segments(leaf) -> list[tuple[np.ndarray, list[list[int]]]]:
     return out
 
 
+def _write_shard(step_dir: Path, fn: str, data: np.ndarray, bf16: bool) -> int:
+    # write through an explicit handle so the shard can be fsynced: a
+    # crash after the step dir's rename-publish must not leave a
+    # discoverable checkpoint with torn shards
+    with open(step_dir / fn, "wb") as f:
+        np.save(f, _bf16_store(data) if bf16 else data)
+        f.flush()
+        os.fsync(f.fileno())
+    return (step_dir / fn).stat().st_size
+
+
 def save_tree(step_dir: Path, name: str, tree: dict) -> dict:
     """Write every locally-held shard; returns this tree's manifest entry."""
     entries = {}
     for path, leaf in _flatten(tree):
         arr_dtype = str(np.asarray(jnp_to_np(leaf)).dtype) if not hasattr(leaf, "dtype") else str(np.dtype(leaf.dtype))
+        bf16 = _is_bf16(arr_dtype)
         segs = []
         for i, (data, idx) in enumerate(_leaf_segments(leaf)):
             fn = f"{name}__{path}__s{i}.npy"
-            # write through an explicit handle so the shard can be
-            # fsynced: a crash after the step dir's rename-publish must
-            # not leave a discoverable checkpoint with torn shards
-            with open(step_dir / fn, "wb") as f:
-                np.save(f, data)
-                f.flush()
-                os.fsync(f.fileno())
-            segs.append({"file": fn, "index": idx,
-                         "nbytes": (step_dir / fn).stat().st_size})
+            nbytes = _write_shard(step_dir, fn, data, bf16)
+            segs.append({"file": fn, "index": idx, "nbytes": nbytes})
         entries[path] = {
             "shape": [int(s) for s in np.shape(leaf)],
             "dtype": arr_dtype,
@@ -128,8 +240,72 @@ def save_tree(step_dir: Path, name: str, tree: dict) -> dict:
     return entries
 
 
+def save_tree_sharded(
+    step_dir: Path, name: str, tree: dict, pid: int
+) -> dict:
+    """This rank's contribution to one tree of a collective sharded save.
+
+    ``Dmat`` leaves: every mapped rank writes its owned local part (halo
+    stripped) as one ``__r<pid>.npy`` file whose manifest segment carries
+    the per-dim FALLS index set and the leaf's ``Dmap``.  Non-Dmat leaves
+    are treated as replicated and written by rank 0 via the legacy path.
+    Returns partial entries merged by rank 0 in ``save_sharded``."""
+    from ..core.dmat import Dmat
+
+    entries: dict[str, dict] = {}
+    for path, leaf in _flatten(tree):
+        if isinstance(leaf, Dmat):
+            dtype_str = str(leaf.dtype)
+            entry = {
+                "shape": [int(s) for s in leaf.shape],
+                "dtype": dtype_str,
+                "dmap": leaf.dmap.to_json(),
+                "segments": [],
+            }
+            if leaf.dmap.inmap(pid):
+                falls = [
+                    leaf.dmap.dim_falls(leaf.shape, d, pid)
+                    for d in range(leaf.ndim)
+                ]
+                if all(falls):  # owns cells along every dim
+                    fn = f"{name}__{path}__r{pid}.npy"
+                    nbytes = _write_shard(
+                        step_dir, fn,
+                        np.ascontiguousarray(leaf.local_view_owned()),
+                        _is_bf16(dtype_str),
+                    )
+                    entry["segments"].append({
+                        "file": fn,
+                        "falls": [_falls_encode(fs) for fs in falls],
+                        "nbytes": nbytes,
+                        "saver": pid,
+                    })
+            entries[path] = entry
+        elif pid == 0:
+            arr_dtype = (str(np.asarray(jnp_to_np(leaf)).dtype)
+                         if not hasattr(leaf, "dtype")
+                         else str(np.dtype(leaf.dtype)))
+            bf16 = _is_bf16(arr_dtype)
+            segs = []
+            for i, (data, idx) in enumerate(_leaf_segments(leaf)):
+                fn = f"{name}__{path}__s{i}.npy"
+                nbytes = _write_shard(step_dir, fn, data, bf16)
+                segs.append({"file": fn, "index": idx, "nbytes": nbytes})
+            entries[path] = {
+                "shape": [int(s) for s in np.shape(leaf)],
+                "dtype": arr_dtype,
+                "segments": segs,
+            }
+    return entries
+
+
 def jnp_to_np(leaf):
     return np.asarray(leaf)
+
+
+# ---------------------------------------------------------------------------
+# Read / reshard
+# ---------------------------------------------------------------------------
 
 
 def reshard_read(
@@ -138,40 +314,56 @@ def reshard_read(
     """Assemble the ``want`` region (default: all) of a saved leaf.
 
     Per dimension, the wanted half-open range is a single-segment FALLS;
-    intersecting it with each saved segment's FALLS yields exactly the file
-    regions to read — the paper's redistribution math, disk edition.
-    """
+    intersecting it with each saved segment's FALLS yields exactly the
+    file regions to read — the paper's redistribution math, disk edition.
+    Shard files are opened ``np.load(mmap_mode='r')`` and only the
+    intersecting windows are touched: a segment with an empty
+    intersection is never opened, and the only allocation is the ``want``
+    output buffer (bf16 entries come back as bit-exact float32)."""
     shape = entry["shape"]
-    dtype = np.dtype(entry["dtype"].replace("bfloat16", "float32"))
-    bf16 = entry["dtype"] == "bfloat16"
+    bf16 = _is_bf16(entry["dtype"])
+    if not shape:  # scalar
+        _FILES.inc()
+        data = np.load(step_dir / entry["segments"][0]["file"])
+        _BYTES.inc(int(data.nbytes))
+        if bf16:
+            data = _bf16_widen(np.asarray(data).view(np.uint16))
+        return data
     if want is None:
         want = [[0, s] for s in shape]
-    out_shape = [stop - start for start, stop in want]
-    out = np.zeros(out_shape, dtype=dtype if not bf16 else np.float32)
-    if not shape:  # scalar
-        data = np.load(step_dir / entry["segments"][0]["file"])
-        return data
+    dtype = np.float32 if bf16 else np.dtype(entry["dtype"])
+    out = np.zeros([stop - start for start, stop in want], dtype=dtype)
+    _note_buffer(out.nbytes)
+    want_falls = [
+        [FALLS(ws, we - 1, max(we - ws, 1), 1)] if we > ws else []
+        for ws, we in want
+    ]
     for seg in entry["segments"]:
-        src_sl, dst_sl = [], []
-        ok = True
-        for d, ((ws, we), (ss, se)) in enumerate(zip(want, seg["index"])):
-            inter = falls_intersect(
-                FALLS(ws, we - 1, max(we - ws, 1), 1),
-                FALLS(ss, se - 1, max(se - ss, 1), 1),
-            )
-            if not inter:
-                ok = False
-                break
-            lo, hi = inter[0].l, inter[0].r + 1
-            src_sl.append(slice(lo - ss, hi - ss))
-            dst_sl.append(slice(lo - ws, hi - ws))
-        if not ok:
+        hit = segment_intersection(want_falls, _segment_falls(seg))
+        if hit is None:
             continue
-        data = np.load(step_dir / seg["file"])
-        if bf16:
-            data = data.astype(np.float32)
-        out[tuple(dst_sl)] = data[tuple(src_sl)]
+        want_pos, file_pos = hit
+        out[as_basic_index(want_pos)] = _read_segment_positions(
+            step_dir, seg, file_pos, bf16
+        )
     return out
+
+
+def _fill_owned_from_disk(
+    step_dir: Path, entry: dict, dmap: Dmap, shape: tuple, pid: int,
+    loc: np.ndarray,
+) -> None:
+    """Fill ``pid``'s owned local storage with its intersection of every
+    saved segment — the mmap fast path of resharding restore."""
+    bf16 = _is_bf16(entry["dtype"])
+    for seg in entry["segments"]:
+        hit = owned_segment_positions(dmap, shape, pid, _segment_falls(seg))
+        if hit is None:
+            continue
+        local_pos, file_pos = hit
+        loc[as_basic_index(local_pos)] = _read_segment_positions(
+            step_dir, seg, file_pos, bf16
+        )
 
 
 def load_tree(
@@ -215,6 +407,30 @@ def load_tree(
     return _unflatten(leaves)
 
 
+def _resolve_dst_map(dst_map, name: str, path: str, entry: dict, np_: int):
+    """Which Dmap a leaf restores under (None -> replicated ndarray).
+
+    ``dst_map`` may be a single :class:`Dmap` (applied to every leaf of
+    matching rank), a dict keyed ``"tree.leaf.path"`` / ``"tree"`` /
+    ``"*"``, or a callable ``(tree, path, entry) -> Dmap | None``.  A
+    leaf no rule covers falls back to its *saved* map when that map fits
+    the live world, else replicates."""
+    m = None
+    if callable(dst_map) and not isinstance(dst_map, Dmap):
+        m = dst_map(name, path, entry)
+    elif isinstance(dst_map, dict):
+        m = dst_map.get(f"{name}.{path}", dst_map.get(name, dst_map.get("*")))
+    elif isinstance(dst_map, Dmap):
+        m = dst_map
+    if m is not None and m.ndim != len(entry["shape"]):
+        m = None
+    if m is None and "dmap" in entry:
+        saved = Dmap.from_json(entry["dmap"])
+        if max(saved.proclist) < np_:
+            m = saved
+    return m
+
+
 class CheckpointManager:
     """Atomic, optionally-async checkpointing with retention + discovery."""
 
@@ -254,11 +470,15 @@ class CheckpointManager:
             manifest["meta"] = extra_meta
         for name, tree in trees.items():
             manifest["trees"][name] = save_tree(tmp, name, tree)
+        self._publish(tmp, final, manifest)
+        self._gc()
+
+    def _publish(self, tmp: Path, final: Path, manifest: dict) -> None:
         with open(tmp / "manifest.json", "w") as f:
             json.dump(manifest, f)
             f.flush()
             os.fsync(f.fileno())
-        # durability order: shard files (synced in save_tree) → manifest
+        # durability order: shard files (synced as written) → manifest
         # (just synced) → the directory naming them → the rename → the
         # parent naming the rename.  Only then is the checkpoint both
         # discoverable and whole after a host crash.
@@ -267,7 +487,53 @@ class CheckpointManager:
             shutil.rmtree(final)
         os.rename(tmp, final)  # atomic publish
         _fsync_dir(self.dir)
-        self._gc()
+
+    def save_sharded(self, step: int, trees: dict[str, dict], ctx=None,
+                     extra_meta: dict | None = None) -> None:
+        """Collective parallel sharded save (all ranks, same ``self.dir``).
+
+        Every mapped rank writes its own ``Dmat`` shards concurrently
+        (one ``__r<pid>.npy`` per leaf, fsynced), partial manifest
+        entries are gathered to rank 0, and rank 0 alone publishes the
+        merged manifest with the same rename/fsync durability chain as
+        :meth:`save`.  Non-Dmat leaves are assumed replicated and written
+        by rank 0.  The manifest records each leaf's ``Dmap``, which is
+        what lets :meth:`restore_resharded` land the bytes under a
+        different grid."""
+        pid = 0 if ctx is None else ctx.pid
+        tmp = self.dir / f"step-{step:08d}.tmp"
+        final = self.dir / f"step-{step:08d}"
+        if pid == 0:
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+        if ctx is not None:
+            ctx.barrier(tag=("__ckpt_mkdir", step))
+        local = {name: save_tree_sharded(tmp, name, tree, pid)
+                 for name, tree in trees.items()}
+        parts = [local] if ctx is None else ctx.gather(
+            0, local, tag=("__ckpt_manifest", step))
+        if pid == 0:
+            manifest = {"step": step, "time": time.time(), "format": 2,
+                        "trees": {}}
+            if extra_meta:
+                manifest["meta"] = extra_meta
+            for part in parts:
+                for name, entries in part.items():
+                    tree_m = manifest["trees"].setdefault(name, {})
+                    for path, e in entries.items():
+                        got = tree_m.get(path)
+                        if got is None:
+                            tree_m[path] = dict(e)
+                        else:
+                            got["segments"] = got["segments"] + e["segments"]
+            for entries in manifest["trees"].values():
+                for e in entries.values():
+                    e["segments"].sort(key=lambda s: s.get("saver", -1))
+            self._publish(tmp, final, manifest)
+            self._gc()
+        if ctx is not None:
+            ctx.barrier(tag=("__ckpt_publish", step))
 
     def wait(self) -> None:
         if self._thread is not None:
@@ -320,7 +586,10 @@ class CheckpointManager:
         self, step: int | None = None, shardings: dict[str, dict] | None = None
     ) -> tuple[int, dict[str, dict], dict]:
         """Returns (step, trees, meta).  ``shardings`` maps tree name to a
-        sharding tree for elastic (PITFALLS) restoration."""
+        sharding tree for elastic (PITFALLS) restoration.  Leaves saved
+        by :meth:`save_sharded` are assembled to full ndarrays (their
+        FALLS segments read like any others); use
+        :meth:`restore_resharded` to get them back as ``Dmat``s."""
         if step is None:
             step = self.latest_step()
             if step is None:
@@ -334,6 +603,152 @@ class CheckpointManager:
             trees[name] = load_tree(step_dir, name, entries, sh)
         return step, trees, manifest.get("meta", {})
 
+    def restore_resharded(
+        self,
+        step: int | None = None,
+        ctx=None,
+        dst_map: "Dmap | dict | Callable | None" = None,
+        *,
+        via: str = "auto",
+    ) -> tuple[int, dict[str, dict], dict]:
+        """Restore under a (possibly different) grid: (step, trees, meta).
+
+        Distributed leaves come back as ``Dmat``s under the map
+        ``dst_map`` resolves for them (see :func:`_resolve_dst_map`);
+        uncovered leaves restore replicated as plain ndarrays.  Two
+        collectively-agreed data paths:
+
+        * ``direct`` — every rank mmap-reads exactly its owned FALLS
+          intersection of the saved segments (parallel, zero messages;
+          needs every rank to see every intersecting shard file).
+        * ``redist`` — ranks of the *saved* map read only their own
+          shards, then one ``RedistPlan`` redistribution over the live
+          transport moves the residual (restore roots that are not a
+          shared filesystem, or any time direct reads are impossible).
+
+        ``via='auto'`` (default) allgathers per-rank file visibility and
+        picks ``direct`` only when unanimous.  No rank ever materializes
+        a global array; the peak reader allocation is tracked in the
+        ``ckpt.peak_buffer_bytes`` gauge."""
+        pid = 0 if ctx is None else ctx.pid
+        np_ = 1 if ctx is None else ctx.np_
+        if pid == 0:
+            if step is None:
+                step = self.latest_step()
+            manifest = None
+            if step is not None:
+                try:
+                    with open(self.dir / f"step-{step:08d}" / "manifest.json") as f:
+                        manifest = json.load(f)
+                except OSError:
+                    manifest = None
+            payload = (step, manifest)
+        else:
+            payload = None
+        if ctx is not None:
+            payload = ctx.bcast(0, payload, tag="__ckpt_reshard_manifest")
+        step, manifest = payload
+        if manifest is None:
+            raise FileNotFoundError(
+                f"no restorable checkpoint under {self.dir} (step={step})"
+            )
+        step_dir = self.dir / f"step-{step:08d}"
+
+        mode = via
+        if via == "auto":
+            ok = self._segments_visible(step_dir, manifest)
+            flags = [ok] if ctx is None else ctx.allgather(
+                bool(ok), tag="__ckpt_reshard_mode")
+            mode = "direct" if all(flags) else "redist"
+        if mode not in ("direct", "redist"):
+            raise ValueError(f"via must be auto|direct|redist, got {via!r}")
+
+        trees: dict[str, dict] = {}
+        for name, entries in manifest["trees"].items():
+            leaves: dict[str, Any] = {}
+            for path, entry in entries.items():
+                m = _resolve_dst_map(dst_map, name, path, entry, np_)
+                if m is None:
+                    leaves[path] = self._restore_replicated(
+                        step_dir, entry, ctx, pid, mode)
+                else:
+                    leaves[path] = self._restore_dmat(
+                        step_dir, entry, m, ctx, pid, np_, mode)
+            trees[name] = _unflatten(leaves)
+        return step, trees, manifest.get("meta", {})
+
+    def _segments_visible(self, step_dir: Path, manifest: dict) -> bool:
+        try:
+            for entries in manifest["trees"].values():
+                for entry in entries.values():
+                    for seg in entry["segments"]:
+                        if not (step_dir / seg["file"]).exists():
+                            return False
+        except (KeyError, TypeError):
+            return False
+        return True
+
+    def _restore_replicated(self, step_dir, entry, ctx, pid, mode):
+        if mode == "direct" or ctx is None:
+            return reshard_read(step_dir, entry)
+        arr = reshard_read(step_dir, entry) if pid == 0 else None
+        return ctx.bcast(0, arr, tag="__ckpt_reshard_repl")
+
+    def _restore_dmat(self, step_dir, entry, m: Dmap, ctx, pid, np_, mode):
+        from ..core.dmat import Dmat
+        from ..core.redist import redistribute
+
+        shape = tuple(int(s) for s in entry["shape"])
+        bf16 = _is_bf16(entry["dtype"])
+        dtype = np.float32 if bf16 else np.dtype(entry["dtype"])
+        if m.proclist and max(m.proclist) >= np_:
+            raise RuntimeError(
+                f"destination map {m!r} does not fit the live world "
+                f"(np={np_}); pass a dst_map over live ranks"
+            )
+        out = Dmat(shape, m, dtype=dtype, ctx=ctx)
+        if out.local is not None and out.local.size:
+            _note_buffer(out.local.nbytes)
+        if mode == "direct":
+            if m.inmap(pid):
+                _fill_owned_from_disk(
+                    step_dir, entry, m, shape, pid, out.local_view_owned())
+            return out
+        # redist: the saved map's ranks read their own shards, then the
+        # residual moves are one RedistPlan redistribution over the live
+        # transport — a checkpoint is just one more distribution.
+        src_map = (Dmap.from_json(entry["dmap"]) if "dmap" in entry
+                   else Dmap([1] * len(shape), proclist=[0]))
+        if max(src_map.proclist) >= np_:
+            raise RuntimeError(
+                f"cannot restore {entry.get('dmap')!r} via the transport: "
+                f"saved map needs rank {max(src_map.proclist)} but the live "
+                f"world has np={np_} and shard files are not visible to "
+                f"every rank"
+            )
+        src = Dmat(shape, src_map, dtype=dtype, ctx=ctx)
+        if src.local is not None and src.local.size:
+            _note_buffer(src.local.nbytes)
+        if src_map.inmap(pid):
+            _fill_owned_from_disk(
+                step_dir, entry, src_map, shape, pid, src.local_view_owned())
+        redistribute(out, src)
+        return out
+
+
+def restore_resharded(
+    mgr: CheckpointManager,
+    step: int | None = None,
+    ctx=None,
+    dst_map=None,
+    *,
+    via: str = "auto",
+) -> tuple[int, dict[str, dict], dict]:
+    """Module-level alias of :meth:`CheckpointManager.restore_resharded`
+    (the elastic-resume call site reads
+    ``restore_resharded(mgr, elastic_resume_step(mgr, ctx), ctx, new_map)``)."""
+    return mgr.restore_resharded(step, ctx, dst_map, via=via)
+
 
 def elastic_resume_step(mgr: CheckpointManager, ctx=None) -> int | None:
     """The step every rank of a relaunched world should resume from.
@@ -345,7 +760,12 @@ def elastic_resume_step(mgr: CheckpointManager, ctx=None) -> int | None:
     makes a faulted run finish bitwise-equal to an unfaulted one.
     Returns ``None`` when any rank has no valid checkpoint (the world
     must start from scratch together).  Without ``ctx`` (or a
-    single-rank world) this is just this rank's ``latest_step()``."""
+    single-rank world) this is just this rank's ``latest_step()``.
+
+    The relaunched world may have a *different* size than the one that
+    saved (``pRUN(restarts=N, elastic_np=M)``): pair this step with
+    :func:`restore_resharded` and a map over the new world and each rank
+    reads/receives exactly the bytes it now owns."""
     mine = mgr.latest_step()
     if ctx is None or getattr(ctx, "np_", 1) <= 1:
         return mine

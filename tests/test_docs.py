@@ -1,0 +1,102 @@
+"""Docs stay true: every runtime knob is documented, every ``DESIGN.md
+§N`` citation in the source resolves to a real section, and no relative
+markdown link is broken.
+
+These are coverage gates, not prose checks — adding a ``PPYTHON_*``
+variable or a ``DESIGN.md §N`` docstring citation without updating
+``docs/`` fails CI with the exact offender named.
+"""
+
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+SRC = REPO / "src"
+DOCS = REPO / "docs"
+
+KNOB_RE = re.compile(r"PPYTHON_[A-Z_]+[A-Z]")
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _src_files():
+    files = [p for p in SRC.rglob("*.py") if "__pycache__" not in p.parts]
+    assert files, "no sources found — repo layout changed?"
+    return files
+
+
+def _md_files():
+    files = [REPO / "README.md", *sorted(DOCS.glob("*.md"))]
+    assert len(files) >= 4  # README + DESIGN + knobs + checkpoint-format
+    return files
+
+
+class TestKnobCoverage:
+    def test_every_knob_in_src_is_documented(self):
+        documented = set(KNOB_RE.findall((DOCS / "knobs.md").read_text()))
+        undocumented = {}
+        for p in _src_files():
+            for knob in KNOB_RE.findall(p.read_text()):
+                if knob not in documented:
+                    undocumented.setdefault(knob, p.relative_to(REPO))
+        assert not undocumented, (
+            f"knobs missing from docs/knobs.md: "
+            f"{sorted(undocumented.items())}"
+        )
+
+    def test_every_documented_knob_exists_in_src(self):
+        in_src = set()
+        for p in _src_files():
+            in_src.update(KNOB_RE.findall(p.read_text()))
+        documented = set(KNOB_RE.findall((DOCS / "knobs.md").read_text()))
+        stale = documented - in_src
+        assert not stale, f"docs/knobs.md documents dead knobs: {sorted(stale)}"
+
+    def test_knob_catalogue_is_nontrivial(self):
+        # the runtime genuinely has dozens of knobs; a gutted catalogue
+        # passing the subset checks above should still fail loudly
+        documented = set(KNOB_RE.findall((DOCS / "knobs.md").read_text()))
+        assert len(documented) >= 25
+
+
+class TestDesignCitations:
+    def _cited_sections(self):
+        cites = {}
+        for p in _src_files():
+            for line in p.read_text().splitlines():
+                if "DESIGN.md" not in line:
+                    continue
+                for n in re.findall(r"§(\d+)", line):
+                    cites.setdefault(int(n), p.relative_to(REPO))
+        return cites
+
+    def test_sources_cite_design_sections(self):
+        assert len(self._cited_sections()) >= 5
+
+    def test_every_cited_section_exists(self):
+        headings = {
+            int(n)
+            for n in re.findall(
+                r"^## §(\d+)", (DOCS / "DESIGN.md").read_text(), re.M)
+        }
+        missing = {n: str(f) for n, f in self._cited_sections().items()
+                   if n not in headings}
+        assert not missing, (
+            f"DESIGN.md §N cited in src/ but no '## §N' heading: {missing}"
+        )
+
+
+class TestMarkdownLinks:
+    @pytest.mark.parametrize("md", _md_files(), ids=lambda p: p.name)
+    def test_relative_links_resolve(self, md):
+        broken = []
+        for target in LINK_RE.findall(md.read_text()):
+            if "://" in target or target.startswith("#"):
+                continue  # external URL / in-page anchor
+            path = (md.parent / target.split("#")[0]).resolve()
+            if not path.is_relative_to(REPO):
+                continue  # GitHub-relative (e.g. the CI badge) — not a file
+            if not path.exists():
+                broken.append(target)
+        assert not broken, f"{md.name}: broken relative links {broken}"

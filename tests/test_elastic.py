@@ -236,6 +236,63 @@ class TestRendezvousEpochFence:
         t.join(10)
         assert not t.is_alive()
 
+    def test_serve_endpoint_table_drops_wrong_world_size(self):
+        srv = bind_listener("127.0.0.1")
+        port = srv.getsockname()[1]
+        addr = f"127.0.0.1:{port}"
+        holder = {}
+
+        def serve():
+            holder["table"] = serve_endpoint_table(
+                srv, 2, time.monotonic() + 15, epoch=0
+            )
+
+        t = threading.Thread(target=serve, daemon=True)
+        t.start()
+        # a registrant claiming a 5-rank world must not join this 2-rank
+        # table (elastic relaunches re-register under a bumped epoch; a
+        # same-epoch size disagreement is always a bug to fence out)
+        alien = socket_mod.create_connection(("127.0.0.1", port), timeout=5)
+        _send_rec(alien, (0, 0, 5, ("alien", 1)))
+        live = _threaded(2, lambda pid: rendezvous_tcp(
+            2, pid, ("127.0.0.1", 9250 + pid), addr,
+            timeout=15, external_server=True, epoch=0,
+        ))
+        t.join(20)
+        want = [("127.0.0.1", 9250), ("127.0.0.1", 9251)]
+        assert holder["table"] == want
+        assert all(tb == want for tb in live)
+        alien.settimeout(5)
+        assert alien.recv(64) == b""  # hung up, not seated
+        alien.close()
+
+    def test_serve_generations_resizes_world_per_epoch(self):
+        # the elastic_np flow: one listener serves epoch 0 at np=2 and
+        # the relaunched epoch 1 at np=3 — each table sized from its own
+        # registrants' world field, not the launcher's original np
+        srv = bind_listener("127.0.0.1")
+        addr = f"127.0.0.1:{srv.getsockname()[1]}"
+        t = threading.Thread(
+            target=serve_generations, args=(srv, 2, time.monotonic() + 30),
+            daemon=True,
+        )
+        t.start()
+
+        def world(epoch, np_):
+            return _threaded(np_, lambda pid: rendezvous_tcp(
+                np_, pid, ("127.0.0.1", 9350 + 10 * epoch + pid), addr,
+                timeout=15, external_server=True, epoch=epoch,
+            ))
+
+        t0 = world(0, 2)
+        t1 = world(1, 3)
+        assert t0[0] == [("127.0.0.1", 9350), ("127.0.0.1", 9351)]
+        assert t1[0] == [("127.0.0.1", 9360), ("127.0.0.1", 9361),
+                         ("127.0.0.1", 9362)]
+        srv.close()
+        t.join(10)
+        assert not t.is_alive()
+
     def test_serve_rendezvous_surfaces_bootstrap_errors(self):
         from repro.launch.prun import _serve_rendezvous
 
@@ -639,3 +696,56 @@ class TestElasticEndToEnd:
             assert state == want
             assert epoch == 1  # every rank finished in the restarted world
         assert metrics.counter("elastic.restarts").value > restarts_before
+
+
+# ---------------------------------------------------------------------------
+# elastic resharding: gang restart at a *different* world size
+# ---------------------------------------------------------------------------
+
+
+def _expected_reshard_state(rows=13, cols=5, steps=6):
+    """The ``elastic_reshard`` global state: each step adds the index
+    field scaled by (step+1), independent of the grid it ran on."""
+    base = (np.arange(float(rows))[:, None] * cols
+            + np.arange(float(cols))[None, :] + 1.0)
+    return base * sum(range(1, steps + 1))
+
+
+class TestElasticReshard:
+    @pytest.mark.parametrize("transport,src_np,dst_np", [
+        ("file", 2, 3),    # scale up
+        ("socket", 3, 2),  # scale down
+    ])
+    def test_restart_at_different_world_is_bitwise_equal(
+        self, transport, src_np, dst_np, tmp_path, monkeypatch
+    ):
+        """Kill a rank mid-run; ``restarts=1, elastic_np=dst_np``
+        relaunches the gang at a different size, the survivors resume
+        through ``restore_resharded`` under the new world's map, and the
+        final global state is bitwise-equal to an unfaulted fixed-size
+        run (the state is defined purely by global index and step)."""
+        from repro.launch import pRUN
+
+        monkeypatch.delenv("PPYTHON_FAULT", raising=False)
+        res = pRUN(
+            "repro.launch._selftest:elastic_reshard", src_np,
+            transport=transport, restarts=1, elastic_np=dst_np, timeout=180,
+            env={
+                "PPYTHON_ELASTIC_CKPT": str(tmp_path),
+                "PPYTHON_FAULT": "kill:rank=1,after_sends=4",
+            },
+        )
+        want = _expected_reshard_state().tolist()
+        assert len(res) == dst_np  # results collected from the new world
+        for state, epoch, world in res:
+            assert epoch == 1 and world == dst_np
+        assert res[0][0] == want  # rank 0 holds the aggregated state
+
+    def test_elastic_np_requires_restarts_and_processes(self):
+        from repro.launch import pRUN
+
+        with pytest.raises(ValueError, match="elastic_np"):
+            pRUN("repro.launch._selftest:pingpong", 2, elastic_np=3)
+        with pytest.raises(ValueError, match="elastic_np"):
+            pRUN("repro.launch._selftest:pingpong", 2, transport="thread",
+                 restarts=1, elastic_np=3)
